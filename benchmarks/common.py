@@ -1,0 +1,48 @@
+"""Benchmark utilities: timing on CPU (relative numbers; TPU is the
+target — structural metrics come from the dry-run artifacts)."""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Callable, Dict, List
+
+import jax
+import jax.numpy as jnp
+
+
+def time_fn(fn, *args, warmup: int = 2, iters: int = 5) -> float:
+    """Median wall time (s) of a jitted callable."""
+    for _ in range(warmup):
+        jax.block_until_ready(fn(*args))
+    ts = []
+    for _ in range(iters):
+        t0 = time.perf_counter()
+        jax.block_until_ready(fn(*args))
+        ts.append(time.perf_counter() - t0)
+    return sorted(ts)[len(ts) // 2]
+
+
+class Csv:
+    """Collects ``name,us_per_call,derived`` rows (harness contract)."""
+
+    def __init__(self):
+        self.rows: List[str] = []
+
+    def add(self, name: str, seconds: float, derived: str = ""):
+        self.rows.append(f"{name},{seconds * 1e6:.1f},{derived}")
+
+    def emit(self):
+        print("name,us_per_call,derived")
+        for r in self.rows:
+            print(r)
+
+
+def small_field(app: str, encoding: str, log2_T: int = 14):
+    import dataclasses as dc
+    from repro.core import fields
+    cfg = fields.make_field_config(app, encoding)
+    g = dc.replace(cfg.grid, log2_table_size=log2_T)
+    if cfg.app == "nerf":
+        return dc.replace(cfg, grid=g)
+    return dc.replace(cfg, grid=g,
+                      mlp=dc.replace(cfg.mlp, in_dim=g.out_dim))

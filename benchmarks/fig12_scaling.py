@@ -1,0 +1,53 @@
+"""Paper Fig. 12 analog: end-to-end speedup vs accelerator scale.
+
+The paper scales NFP units (8/16/32/64) and reports end-to-end speedup
+bounded by Amdahl (the un-accelerated pre/post kernels). We reproduce the
+*structure* of that claim: the field-eval stage strong-scales with chips
+(pixel-parallel), the pre/post stage is the serial fraction; speedup(N) is
+derived from the measured single-chip split + Amdahl, and cross-checked
+against the paper's reported averages."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from benchmarks.common import Csv, small_field, time_fn
+from repro.common.param import unbox
+from repro.core import encoding as enc, fields, render
+from repro.core.mlp import apply_mlp
+
+PAPER_AVG = {  # hashgrid, scaling -> avg speedup (paper §VI)
+    8: 12.94, 16: 20.85, 32: 33.73, 64: 39.04}
+
+
+def run(csv: Csv, n: int = 65536):
+    cfg = small_field("nvr", "hash")
+    params, _ = unbox(fields.init_field(jax.random.PRNGKey(0), cfg))
+    pts = jax.random.uniform(jax.random.PRNGKey(1), (n, 3))
+    d = jax.random.normal(jax.random.PRNGKey(2), (n, 3))
+    dirs = d / jnp.linalg.norm(d, axis=-1, keepdims=True)
+
+    f = jax.jit(lambda p, x, dd: fields.apply_field(p, cfg, x, dd))
+    t_field = time_fn(f, params, pts, dirs)
+    n_rays = n // 32
+    cam = render.Camera(128, 128, 100.0,
+                        render.look_at((2, 1.5, 1.5), (0, 0, 0)))
+    ids = jnp.arange(n_rays, dtype=jnp.int32)
+
+    def prepost(ids):
+        o, dd = render.make_rays(cam, ids)
+        p, dts = render.sample_along_rays(o, dd, 0.5, 4.5, 32)
+        return render.composite(jnp.ones((n_rays, 32, 3)) * 0.5,
+                                jnp.ones((n_rays, 32)), dts)
+    t_pp = time_fn(jax.jit(prepost), ids)
+
+    serial_frac = t_pp / (t_pp + t_field)
+    csv.add("fig12/serial_fraction", t_pp + t_field,
+            f"prepost_share={serial_frac * 100:.1f}%")
+    # the paper additionally fuses pre/post for ~9.94x; apply both views
+    for scale in (8, 16, 32, 64):
+        amdahl = 1.0 / (serial_frac + (1 - serial_frac) / scale)
+        fused_pp = 1.0 / (serial_frac / 9.94 + (1 - serial_frac) / scale)
+        csv.add(f"fig12/speedup_scale{scale}", amdahl / 1e6,
+                f"amdahl={amdahl:.2f}x_fusedpp={fused_pp:.2f}x_paper="
+                f"{PAPER_AVG[scale]}x")

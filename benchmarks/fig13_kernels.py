@@ -1,0 +1,47 @@
+"""Paper Fig. 13 analog: kernel-level benefit of NFP fusion — the fused
+encode+MLP path vs the unfused (DRAM round-trip) path.
+
+Two measurements:
+  * wall time on this host (XLA-fused vs optimization-barrier'd)
+  * the structural quantity that transfers to TPU: intermediate bytes
+    that the unfused path writes+reads through memory and the fused
+    path never materializes (B x L*F x 4 x 2).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from benchmarks.common import Csv, small_field, time_fn
+from repro.common.param import unbox
+from repro.core import fields
+
+
+def run(csv: Csv, n: int = 262144):
+    for app in ("nvr", "gia"):
+        cfg = small_field(app, "hash")
+        params, _ = unbox(fields.init_field(jax.random.PRNGKey(0), cfg))
+        pts = jax.random.uniform(jax.random.PRNGKey(1), (n, cfg.grid.dim))
+        dirs = None
+        if app == "nvr":
+            d = jax.random.normal(jax.random.PRNGKey(2), (n, 3))
+            dirs = d / jnp.linalg.norm(d, axis=-1, keepdims=True)
+
+        fused = jax.jit(lambda p, x, dd: fields.apply_field(
+            p, cfg, x, dd, fused=True))
+        unfused = jax.jit(lambda p, x, dd: fields.apply_field(
+            p, cfg, x, dd, fused=False))
+        t_f = time_fn(fused, params, pts, dirs)
+        t_u = time_fn(unfused, params, pts, dirs)
+        saved_bytes = n * cfg.grid.out_dim * 4 * 2   # write + read back
+        csv.add(f"fig13/{app}/fused", t_f,
+                f"speedup={t_u / t_f:.2f}x")
+        csv.add(f"fig13/{app}/unfused", t_u,
+                f"roundtrip_bytes={saved_bytes}")
+
+        # Pallas kernel (interpret mode: correctness-true, CPU-slow; the
+        # structural VMEM-residency claim is in the kernel's BlockSpecs)
+        t_k = time_fn(jax.jit(lambda p, x, dd: fields.apply_field(
+            p, cfg, x[:8192], dd[:8192] if dd is not None else None,
+            use_pallas=True)), params, pts, dirs)
+        csv.add(f"fig13/{app}/pallas_interpret_8k", t_k, "interpret=True")

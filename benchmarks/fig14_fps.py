@@ -1,0 +1,35 @@
+"""Paper Fig. 14 analog: pixels renderable per FPS budget.
+
+Measures pixels/s of the (fused) field pipeline on this host and derives
+the max resolution at 30/60/90/120 FPS; the TPU-target projection scales
+by the dry-run roofline bound (EXPERIMENTS.md §Roofline)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from benchmarks.common import Csv, small_field, time_fn
+from repro.common.param import unbox
+from repro.core import fields, pipeline
+from repro.data import scenes
+
+RES = {"HD": 1280 * 720, "FHD": 1920 * 1080, "QHD": 2560 * 1440,
+       "4k": 3840 * 2160, "5k": 5120 * 2880, "8k": 7680 * 4320}
+
+
+def run(csv: Csv, tile: int = 16384):
+    for app in ("gia", "nvr"):
+        cfg = small_field(app, "hash")
+        params, _ = unbox(fields.init_field(jax.random.PRNGKey(0), cfg))
+        cam = scenes.default_camera(256, 256)
+        settings = pipeline.RenderSettings(tile_pixels=tile, n_samples=32)
+        tile_fn = jax.jit(pipeline.make_tile_fn(cfg, settings, cam))
+        ids = jnp.arange(tile, dtype=jnp.int32)
+        t = time_fn(tile_fn, params, ids)
+        pps = tile / t
+        for fps in (30, 60, 90, 120):
+            budget = pps / fps
+            fit = [k for k, v in RES.items() if v <= budget]
+            csv.add(f"fig14/{app}/fps{fps}", t,
+                    f"pixels_per_frame={budget:.3g}_max_res="
+                    f"{fit[-1] if fit else '<HD'}")

@@ -1,0 +1,56 @@
+"""Paper Fig. 5: kernel-level breakdown of the neural-graphics apps —
+fraction of step time in input encoding vs MLP vs pre/post kernels.
+
+The paper's RTX3090 numbers: encoding+MLP = 72.4% (hashgrid) / 60.0%
+(densegrid) / 60.0% (tiled) of application time. We measure the same
+split on this host (CPU timings; relative shares are the claim)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from benchmarks.common import Csv, small_field, time_fn
+from repro.common.param import unbox
+from repro.core import encoding as enc, fields, render
+from repro.core.mlp import apply_mlp
+
+
+def run(csv: Csv, n: int = 65536, encodings=("hash", "dense", "tiled")):
+    for kind in encodings:
+        cfg = small_field("nvr", kind)
+        params, _ = unbox(fields.init_field(jax.random.PRNGKey(0), cfg))
+        pts = jax.random.uniform(jax.random.PRNGKey(1), (n, 3))
+        d = jax.random.normal(jax.random.PRNGKey(2), (n, 3))
+        dirs = d / jnp.linalg.norm(d, axis=-1, keepdims=True)
+
+        encode = jax.jit(lambda t, p: enc.grid_encode(p, t, cfg.grid))
+        mlp = jax.jit(lambda mp, h: apply_mlp(mp, h, cfg.mlp))
+        feats = encode(params["grid"], pts)
+
+        # pre/post: ray gen + sampling + compositing for n/32 rays
+        n_rays = n // 32
+        cam = render.Camera(128, 128, 100.0, render.look_at(
+            (2.0, 1.5, 1.5), (0, 0, 0)))
+        ids = jnp.arange(n_rays, dtype=jnp.int32)
+
+        def prepost(ids):
+            o, dd = render.make_rays(cam, ids)
+            p, dts = render.sample_along_rays(o, dd, 0.5, 4.5, 32)
+            sig = jnp.ones((n_rays, 32))
+            rgbs = jnp.ones((n_rays, 32, 3)) * 0.5
+            return render.composite(rgbs, sig, dts)
+        prepost = jax.jit(prepost)
+
+        t_enc = time_fn(encode, params["grid"], pts)
+        t_mlp = time_fn(mlp, params["mlp"], feats)
+        t_pp = time_fn(prepost, ids)
+        total = t_enc + t_mlp + t_pp
+        share = (t_enc + t_mlp) / total
+        csv.add(f"fig5/{kind}/encode", t_enc,
+                f"{t_enc / total * 100:.1f}%_of_step")
+        csv.add(f"fig5/{kind}/mlp", t_mlp,
+                f"{t_mlp / total * 100:.1f}%_of_step")
+        csv.add(f"fig5/{kind}/prepost", t_pp,
+                f"{t_pp / total * 100:.1f}%_of_step")
+        csv.add(f"fig5/{kind}/enc+mlp_share", total,
+                f"{share * 100:.1f}%_paper_{dict(hash=72.4, dense=60.0, tiled=60.0)[kind]}%")

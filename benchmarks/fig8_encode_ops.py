@@ -1,0 +1,49 @@
+"""Paper Fig. 8 analog: operation-level breakdown inside the encoding
+kernel (hash / index arithmetic / gather / interpolation), plus the
+modulo-vs-mask strength reduction the NGPC hardware applies."""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from benchmarks.common import Csv, time_fn
+from repro.core import encoding as enc
+
+
+def run(csv: Csv, n: int = 262144):
+    cfg = dataclasses.replace(enc.hashgrid_config(), log2_table_size=14)
+    tables = enc.init_grid(jax.random.PRNGKey(0), cfg).value
+    pts = jax.random.uniform(jax.random.PRNGKey(1), (n, 3))
+    res = cfg.level_resolution(10)
+    coords = jnp.clip((pts * res).astype(jnp.int32), 0, res - 1)
+
+    t_hash = time_fn(jax.jit(
+        lambda c: enc.hash_index(c, cfg.table_size)), coords)
+    idx = enc.hash_index(coords, cfg.table_size)
+    t_gather = time_fn(jax.jit(
+        lambda t, i: jnp.take(t, i, axis=0)), tables[10], idx)
+
+    def interp_only(p):
+        cell = jnp.floor(p * res)
+        frac = p * res - cell
+        w = jnp.prod(frac, -1)
+        return w
+    t_interp = time_fn(jax.jit(interp_only), pts)
+    t_full = time_fn(jax.jit(
+        lambda p, t: enc.grid_encode(p, t, cfg)), pts, tables)
+    csv.add("fig8/hash_xor", t_hash, "per_level_per_corner")
+    csv.add("fig8/gather", t_gather, "the_grid_sram_lookup")
+    csv.add("fig8/interp_weights", t_interp, "")
+    csv.add("fig8/full_encode_16L", t_full,
+            f"levels={cfg.n_levels}_corners=8")
+
+    # modulo vs AND-mask (the NGPC hardware optimization, Section V)
+    big = coords.astype(jnp.uint32) * jnp.uint32(2654435761)
+    t_mod = time_fn(jax.jit(lambda x: x % jnp.uint32(cfg.table_size)), big)
+    t_and = time_fn(jax.jit(lambda x: x & jnp.uint32(cfg.table_size - 1)),
+                    big)
+    csv.add("fig8/modulo", t_mod, "")
+    csv.add("fig8/and_mask", t_and,
+            f"mod_over_mask={t_mod / max(t_and, 1e-9):.2f}x")

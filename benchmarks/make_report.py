@@ -1,0 +1,49 @@
+"""Regenerate the EXPERIMENTS.md roofline table from dryrun.json.
+
+  PYTHONPATH=src python benchmarks/make_report.py
+prints the markdown table (stdout); EXPERIMENTS.md embeds the output."""
+import json
+from pathlib import Path
+
+RESULTS = Path(__file__).parent / "results" / "dryrun.json"
+
+
+def table(mesh_suffix="/single", fields=False):
+    d = json.loads(RESULTS.read_text())
+    out = ["| cell | compute ms | memory ms | coll ms | dominant | "
+           "useful | fits16G | GB args+temp |",
+           "|---|---|---|---|---|---|---|---|"]
+    for k in sorted(d):
+        if not k.endswith(mesh_suffix) or "@" in k:
+            continue
+        if k.startswith("field") != fields:
+            continue
+        r = d[k]
+        name = k[: -len(mesh_suffix)]
+        if "skipped" in r:
+            out.append(f"| {name} | — | — | — | SKIP (long_500k needs "
+                       f"sub-quadratic attn) | — | — | — |")
+            continue
+        if "error" in r:
+            out.append(f"| {name} | ERROR | | | | | | |")
+            continue
+        ma = r.get("memory_analysis", {})
+        u = r.get("useful_flops_ratio")
+        out.append(
+            f"| {name} | {r['compute_s'] * 1e3:.1f} | "
+            f"{r['memory_s'] * 1e3:.1f} | {r['collective_s'] * 1e3:.1f} | "
+            f"{r['dominant'].replace('_s', '')} | "
+            f"{'' if u != u else f'{u:.2f}'} | "
+            f"{'Y' if ma.get('fits_v5e_16g') else 'N'} | "
+            f"{(ma.get('argument_bytes') or 0) / 2 ** 30:.1f}+"
+            f"{(ma.get('temp_bytes') or 0) / 2 ** 30:.1f} |")
+    return "\n".join(out)
+
+
+if __name__ == "__main__":
+    print("### Single-pod (16x16 = 256 chips), LM cells\n")
+    print(table("/single", fields=False))
+    print("\n### Multi-pod (2x16x16 = 512 chips), LM cells\n")
+    print(table("/multi", fields=False))
+    print("\n### Paper apps (batched 2^21-pixel render step)\n")
+    print(table("/single", fields=True))

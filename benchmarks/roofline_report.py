@@ -1,0 +1,28 @@
+"""Summarize the dry-run roofline table (reads benchmarks/results/
+dryrun.json produced by repro.launch.dryrun)."""
+from __future__ import annotations
+
+import json
+from pathlib import Path
+
+from benchmarks.common import Csv
+
+RESULTS = Path(__file__).parent / "results" / "dryrun.json"
+
+
+def run(csv: Csv):
+    if not RESULTS.exists():
+        csv.add("roofline/missing", 0.0, "run_repro.launch.dryrun_--all")
+        return
+    data = json.loads(RESULTS.read_text())
+    for key, rec in sorted(data.items()):
+        if "skipped" in rec:
+            csv.add(f"roofline/{key}", 0.0, "skipped")
+            continue
+        if "error" in rec:
+            csv.add(f"roofline/{key}", 0.0, f"ERROR")
+            continue
+        csv.add(f"roofline/{key}", rec.get("bound_s", 0.0),
+                f"dom={rec.get('dominant', '?')}"
+                f"_useful={rec.get('useful_flops_ratio', float('nan')):.2f}"
+                f"_fits={rec.get('memory_analysis', {}).get('fits_v5e_16g')}")

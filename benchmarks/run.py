@@ -1,0 +1,53 @@
+"""Benchmark harness — one module per paper table/figure.
+
+  PYTHONPATH=src python -m benchmarks.run [--only fig5,table1]
+
+Prints ``name,us_per_call,derived`` CSV."""
+from __future__ import annotations
+
+import argparse
+import sys
+from pathlib import Path
+
+sys.path.insert(0, str(Path(__file__).resolve().parents[1] / "src"))
+sys.path.insert(0, str(Path(__file__).resolve().parents[1]))
+
+from benchmarks.common import Csv  # noqa: E402
+
+MODULES = [
+    ("table1", "benchmarks.table1_models"),
+    ("fig5", "benchmarks.fig5_breakdown"),
+    ("fig8", "benchmarks.fig8_encode_ops"),
+    ("fig12", "benchmarks.fig12_scaling"),
+    ("fig13", "benchmarks.fig13_kernels"),
+    ("fig14", "benchmarks.fig14_fps"),
+    ("table3", "benchmarks.table3_bandwidth"),
+    ("roofline", "benchmarks.roofline_report"),
+]
+
+
+def main(argv=None) -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", default=None,
+                    help="comma-separated subset of: "
+                         + ",".join(k for k, _ in MODULES))
+    args = ap.parse_args(argv)
+    only = set(args.only.split(",")) if args.only else None
+
+    csv = Csv()
+    import importlib
+    for key, modname in MODULES:
+        if only is not None and key not in only:
+            continue
+        mod = importlib.import_module(modname)
+        try:
+            mod.run(csv)
+        except Exception as e:  # noqa: BLE001 — report, keep going
+            csv.add(f"{key}/ERROR", 0.0, f"{type(e).__name__}")
+            import traceback
+            traceback.print_exc()
+    csv.emit()
+
+
+if __name__ == "__main__":
+    main()

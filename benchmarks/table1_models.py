@@ -1,0 +1,37 @@
+"""Paper Table I: the 12 app x encoding configurations — verify exact
+parameterization and time one field evaluation for each."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from benchmarks.common import Csv, small_field, time_fn
+from repro.common.param import unbox
+from repro.core import fields
+
+
+def run(csv: Csv, n: int = 16384):
+    for app in ("nerf", "nsdf", "gia", "nvr"):
+        for kind in ("hash", "dense", "tiled"):
+            full = fields.make_field_config(app, kind)
+            # structural checks against Table I
+            g = full.grid
+            expect_L = {"hash": 16, "dense": 8, "tiled": 2}[kind]
+            assert g.n_levels == expect_L, (app, kind, g.n_levels)
+            assert g.log2_table_size == (24 if app == "gia" else 19)
+            assert full.mlp.hidden_dim == 64
+
+            cfg = small_field(app, kind)
+            params, _ = unbox(fields.init_field(jax.random.PRNGKey(0),
+                                                cfg))
+            pts = jax.random.uniform(jax.random.PRNGKey(1),
+                                     (n, cfg.grid.dim))
+            dirs = None
+            if app in ("nerf", "nvr"):
+                d = jax.random.normal(jax.random.PRNGKey(2), (n, 3))
+                dirs = d / jnp.linalg.norm(d, axis=-1, keepdims=True)
+            f = jax.jit(lambda p, x, dd: fields.apply_field(
+                p, cfg, x, dd, fused=True))
+            t = time_fn(f, params, pts, dirs)
+            csv.add(f"table1/{app}/{kind}", t,
+                    f"params={fields.field_param_count(full)}")

@@ -1,0 +1,25 @@
+"""Paper Table III analog: accelerator I/O bandwidth per frame.
+
+The NFP consumes normalized coordinates and emits RGB(sigma); Table III
+derives GB/s at 60 FPS. We compute the same I/O model for our fused
+field step at 4k/60 and compare against v5e HBM bandwidth (819 GB/s)."""
+from __future__ import annotations
+
+from benchmarks.common import Csv
+
+PAPER = {"NeRF": 231.743, "NSDF": 69.523, "GIA": 69.523, "NVR": 69.523}
+
+
+def run(csv: Csv):
+    pixels_4k = 3840 * 2160
+    fps = 60
+    for app, samples, in_dim, out_dim in (
+            ("NeRF", 32, 3 + 3, 4), ("NSDF", 1, 3, 1),
+            ("GIA", 1, 2, 3), ("NVR", 32, 3 + 3, 4)):
+        n_eval = pixels_4k * samples
+        in_bw = n_eval * in_dim * 4 * fps
+        out_bw = n_eval * out_dim * 4 * fps
+        total = (in_bw + out_bw)
+        csv.add(f"table3/{app}", 0.0,
+                f"io_GBps={total / 1e9:.1f}_paper={PAPER[app]}"
+                f"_pct_v5e_hbm={total / 819e9 * 100:.0f}%")

@@ -1,0 +1,24 @@
+"""LM serving example: prefill + batched greedy decode against the KV /
+SSM caches for any assigned architecture (reduced scale).
+
+  PYTHONPATH=src python examples/serve_lm.py --arch mamba2-2.7b
+"""
+import argparse
+import sys
+from pathlib import Path
+
+sys.path.insert(0, str(Path(__file__).resolve().parents[1] / "src"))
+
+from repro.launch.serve import serve_lm  # noqa: E402
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="h2o-danube-1.8b")
+    ap.add_argument("--gen", type=int, default=16)
+    args = ap.parse_args()
+    serve_lm(args.arch, reduced=True, gen_len=args.gen)
+
+
+if __name__ == "__main__":
+    main()

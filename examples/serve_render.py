@@ -1,0 +1,34 @@
+"""End-to-end serving driver (the paper's deployment scenario): train a
+small neural field, then serve batched pixel-tile requests through the
+NGPC-style pipeline — including the Pallas fused-field kernel path — and
+report Mpix/s + frame-budget numbers (paper Fig. 14 style).
+
+  PYTHONPATH=src python examples/serve_render.py [--app nvr] [--pallas]
+"""
+import argparse
+import sys
+from pathlib import Path
+
+sys.path.insert(0, str(Path(__file__).resolve().parents[1] / "src"))
+
+from repro.launch.serve import serve_render  # noqa: E402
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--app", default="gia",
+                    choices=["gia", "nsdf", "nvr", "nerf"])
+    ap.add_argument("--encoding", default="hash",
+                    choices=["hash", "dense", "tiled"])
+    ap.add_argument("--pallas", action="store_true",
+                    help="serve through the fused Pallas NFP kernel "
+                         "(interpret mode on CPU)")
+    ap.add_argument("--requests", type=int, default=8)
+    ap.add_argument("--train-steps", type=int, default=150)
+    args = ap.parse_args()
+    serve_render(args.app, args.encoding, train_steps=args.train_steps,
+                 n_requests=args.requests, use_pallas=args.pallas)
+
+
+if __name__ == "__main__":
+    main()

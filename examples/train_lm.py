@@ -1,0 +1,45 @@
+"""Train a reduced LM arch on the synthetic motif stream with the full
+production machinery: sharded train step, async checkpointing, resume.
+
+  PYTHONPATH=src python examples/train_lm.py --arch olmoe-1b-7b --steps 60
+  # kill it mid-run and re-run: it resumes from the checkpoint
+"""
+import argparse
+import sys
+import tempfile
+from pathlib import Path
+
+sys.path.insert(0, str(Path(__file__).resolve().parents[1] / "src"))
+
+from repro.configs import registry  # noqa: E402
+from repro.launch.mesh import make_local_mesh  # noqa: E402
+from repro.launch.train import train_loop  # noqa: E402
+from repro.parallel import api  # noqa: E402
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="olmoe-1b-7b")
+    ap.add_argument("--steps", type=int, default=60)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--ckpt-dir", default=None)
+    ap.add_argument("--compression", default=None,
+                    choices=["topk", "int8"])
+    args = ap.parse_args()
+
+    cfg = registry.reduced_config(args.arch)
+    mesh = make_local_mesh()
+    ckpt = args.ckpt_dir or tempfile.mkdtemp(prefix="repro_ckpt_")
+    print(f"arch={args.arch} (reduced: {cfg.n_layers}L d={cfg.d_model}) "
+          f"ckpt={ckpt}")
+    tc = api.TrainConfig(compression=args.compression)
+    _, losses = train_loop(cfg, mesh, steps=args.steps, seq_len=args.seq,
+                           global_batch=args.batch, ckpt_dir=ckpt,
+                           ckpt_every=20, train_cfg=tc)
+    print(f"loss: {losses[0]:.4f} -> {losses[-1]:.4f} "
+          f"(the motif stream is learnable; expect a clear drop)")
+
+
+if __name__ == "__main__":
+    main()

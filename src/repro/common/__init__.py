@@ -1,0 +1,5 @@
+from repro.common.param import Boxed, boxed, unbox, specs_of, tree_bytes, count_params
+from repro.common.partitioning import (
+    LogicalRules, DEFAULT_RULES, logical_to_spec, specs_to_shardings,
+    constrain, divisible_fallback,
+)

@@ -1,0 +1,105 @@
+"""Parameter trees with attached logical sharding axes.
+
+Params are plain nested dicts of jax arrays. During ``init`` each leaf is a
+``Boxed(value, axes)`` carrying the *logical* axis names of every dimension
+(e.g. ``('embed', 'mlp')``). ``unbox`` strips boxes into a (params, specs)
+pair; specs are later mapped onto the physical mesh by
+``repro.common.partitioning``. Single source of truth: the init site.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+@dataclasses.dataclass
+class Boxed:
+    """A parameter leaf annotated with logical axis names (one per dim).
+
+    Registered as a pytree node (axes = static aux data) so init functions
+    returning Boxed leaves compose with vmap/eval_shape; rank mismatches
+    that appear *inside* transforms (e.g. vmap adding a batch dim) are
+    resolved by the caller prepending the new logical axis."""
+    value: Any
+    axes: Tuple[Optional[str], ...]
+
+
+jax.tree_util.register_pytree_node(
+    Boxed,
+    lambda b: ((b.value,), tuple(b.axes)),
+    lambda axes, children: Boxed(children[0], axes),
+)
+
+
+def boxed(value, axes):
+    return Boxed(value, tuple(axes))
+
+
+def _is_box(x):
+    return isinstance(x, Boxed)
+
+
+def unbox(tree):
+    """Split a Boxed tree into (params, logical_specs)."""
+    params = jax.tree.map(lambda b: b.value, tree, is_leaf=_is_box)
+    specs = jax.tree.map(lambda b: b.axes, tree, is_leaf=_is_box)
+    return params, specs
+
+
+def specs_of(tree):
+    return jax.tree.map(lambda b: b.axes, tree, is_leaf=_is_box)
+
+
+def tree_bytes(tree) -> int:
+    return sum(
+        np.prod(l.shape) * l.dtype.itemsize
+        for l in jax.tree.leaves(tree)
+        if hasattr(l, "shape"))
+
+
+def count_params(tree) -> int:
+    return int(sum(int(np.prod(l.shape)) for l in jax.tree.leaves(tree)))
+
+
+# ----------------------------------------------------------------------------
+# Initializers (traceable; safe under jax.eval_shape for the dry-run path).
+# ----------------------------------------------------------------------------
+
+def normal_init(key, shape, dtype=jnp.float32, stddev=0.02):
+    return (stddev * jax.random.normal(key, shape)).astype(dtype)
+
+
+def scaled_init(key, shape, dtype=jnp.float32, fan_in=None):
+    """LeCun-style 1/sqrt(fan_in); fan_in defaults to shape[0]."""
+    fan = fan_in if fan_in is not None else shape[0]
+    return (jax.random.normal(key, shape) / jnp.sqrt(float(max(fan, 1)))
+            ).astype(dtype)
+
+
+def uniform_init(key, shape, dtype=jnp.float32, scale=1e-4):
+    """instant-NGP initializes grid features U(-1e-4, 1e-4)."""
+    return jax.random.uniform(
+        key, shape, minval=-scale, maxval=scale).astype(dtype)
+
+
+def zeros_init(_key, shape, dtype=jnp.float32):
+    return jnp.zeros(shape, dtype)
+
+
+def ones_init(_key, shape, dtype=jnp.float32):
+    return jnp.ones(shape, dtype)
+
+
+class KeyGen:
+    """Deterministic key splitter: kg = KeyGen(key); k = kg()."""
+
+    def __init__(self, key):
+        self._key = key
+
+    def __call__(self):
+        self._key, sub = jax.random.split(self._key)
+        return sub

@@ -1,0 +1,215 @@
+"""Logical-axis → mesh-axis partitioning rules.
+
+Every parameter/activation dimension carries a *logical* name
+('embed', 'mlp', 'heads', 'expert', 'batch', ...). A ``LogicalRules`` table
+maps logical names to physical mesh axes ('pod', 'data', 'model'). Applying
+rules yields ``PartitionSpec``s.
+
+Divisibility fallback: if a tensor dimension is not divisible by the size of
+its assigned mesh axes, that dimension falls back to replication (None) for
+that tensor only, and the event is recorded. This is what makes one rule set
+compile across all 40 (arch x shape) dry-run cells; the fallback log feeds
+the roofline notes (replication shows up as extra memory/collective bytes).
+"""
+from __future__ import annotations
+
+import collections
+import dataclasses
+import math
+from typing import Dict, List, Optional, Sequence, Tuple, Union
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+MeshAxes = Union[None, str, Tuple[str, ...]]
+
+
+@dataclasses.dataclass
+class LogicalRules:
+    """Ordered mapping of logical axis name -> mesh axes."""
+    rules: Dict[str, MeshAxes]
+    # record of (path, dim, logical, axes, size) replication fallbacks
+    fallbacks: List[Tuple] = dataclasses.field(default_factory=list)
+
+    def copy_with(self, **overrides) -> "LogicalRules":
+        new = dict(self.rules)
+        new.update(overrides)
+        return LogicalRules(new)
+
+    def mesh_axes(self, logical: Optional[str]) -> MeshAxes:
+        if logical is None:
+            return None
+        return self.rules.get(logical, None)
+
+
+# The production default: 'data' does DP+FSDP (ZeRO-3 weight sharding via
+# 'embed'), 'model' does TP/EP, 'pod' adds cross-pod DP. SP is enabled by
+# remapping 'act_seq' to 'model' (see sequence_parallel_rules).
+DEFAULT_RULES = LogicalRules({
+    # --- activations ---
+    "batch": ("pod", "data"),
+    # Megatron-SP by default: the residual stream's seq dim shards over
+    # 'model' between blocks. Without it train_4k activations do not fit
+    # v5e HBM (52 GB temp vs 14 GB with SP on yi-6b — EXPERIMENTS.md §Perf)
+    "act_seq": "model",
+    "act_embed": None,
+    "act_heads": "model",
+    "act_mlp": "model",
+    "act_expert": "model",
+    # --- parameters ---
+    "embed": "data",          # FSDP shard dim
+    "mlp": "model",           # TP: FFN hidden
+    "heads": "model",         # TP: attention q-heads
+    "kv_heads": "model",      # TP: attention kv-heads (falls back if < axis)
+    "head_dim": None,
+    "qkv": None,
+    "vocab": "model",         # TP: embedding/logits vocab shard
+    "expert": "model",        # EP: expert dim
+    "expert_mlp": None,       # per-expert hidden (already expert-sharded)
+    "ssm_inner": "model",     # TP: mamba inner dim / heads
+    "ssm_state": None,
+    "conv": None,
+    "layers": None,           # scan-stacked layer dim
+    "stage": None,            # pipeline stage dim
+    # --- neural fields (the paper's models) ---
+    "level": None,            # multi-res levels stay chip-local (grid_sram)
+    "table": "data",          # hash tables FSDP-sharded for *training* only
+    "feature": None,
+    "field_batch": ("pod", "data", "model"),  # pixels/rays: fully DP
+    "width": None,
+})
+
+
+def sequence_parallel_rules(base: LogicalRules) -> LogicalRules:
+    """Megatron-SP: shard the sequence dim of activations over 'model'."""
+    return base.copy_with(act_seq="model")
+
+
+def rule_preset(name: str) -> LogicalRules:
+    """Named rule sets for dry-run/perf experiments (fresh copy each call
+    — fallback logs must not leak across cells)."""
+    presets = {
+        "baseline": lambda: DEFAULT_RULES.copy_with(),   # SP on (default)
+        "sp": lambda: DEFAULT_RULES.copy_with(),         # alias
+        # SP off: the non-sequence-parallel starting point (§Perf it.0)
+        "nosp": lambda: DEFAULT_RULES.copy_with(act_seq=None),
+        # ZeRO-less: params replicated over 'data' (pure DP + TP)
+        "noz": lambda: DEFAULT_RULES.copy_with(embed=None, table=None),
+        # expert-heavy: experts over data axis too (for tiny-expert MoE)
+        "ep2d": lambda: DEFAULT_RULES.copy_with(expert=("model", "data")),
+        # tiny models (whisper-base): the 16-way model axis is wasted on
+        # 8 heads / indivisible vocab — use it as extra DP instead
+        "tinydp": lambda: DEFAULT_RULES.copy_with(
+            batch=("pod", "data", "model"), act_seq=None, act_heads=None,
+            act_mlp=None, act_expert=None, mlp=None, heads=None,
+            kv_heads=None, vocab=None, expert=None, ssm_inner=None),
+    }
+    return presets[name]()
+
+
+def _axes_size(mesh: Mesh, axes: MeshAxes) -> int:
+    if axes is None:
+        return 1
+    if isinstance(axes, str):
+        axes = (axes,)
+    return math.prod(mesh.shape[a] for a in axes)
+
+
+def _present(mesh: Mesh, axes: MeshAxes) -> MeshAxes:
+    """Drop mesh axes that this mesh does not have (e.g. 'pod' single-pod)."""
+    if axes is None:
+        return None
+    if isinstance(axes, str):
+        return axes if axes in mesh.shape else None
+    kept = tuple(a for a in axes if a in mesh.shape)
+    if not kept:
+        return None
+    return kept if len(kept) > 1 else kept[0]
+
+
+def divisible_fallback(mesh: Mesh, shape: Sequence[int],
+                       logical: Sequence[Optional[str]],
+                       rules: LogicalRules, path: str = "") -> P:
+    """Build a PartitionSpec, replicating any non-divisible dimension."""
+    spec = []
+    used: set = set()
+    for d, (dim, name) in enumerate(zip(shape, logical)):
+        axes = _present(mesh, rules.mesh_axes(name))
+        if axes is None:
+            spec.append(None)
+            continue
+        tup = (axes,) if isinstance(axes, str) else tuple(axes)
+        # a mesh axis may appear at most once in a PartitionSpec
+        tup = tuple(a for a in tup if a not in used)
+        # greedily drop trailing axes until divisible
+        while tup and dim % math.prod(mesh.shape[a] for a in tup) != 0:
+            tup = tup[:-1]
+        if not tup:
+            rules.fallbacks.append((path, d, name, axes, dim))
+            spec.append(None)
+        else:
+            used.update(tup)
+            spec.append(tup if len(tup) > 1 else tup[0])
+    return P(*spec)
+
+
+def logical_to_spec(specs_tree, mesh: Mesh, rules: LogicalRules,
+                    shapes_tree=None):
+    """Map a tree of logical-axis tuples to PartitionSpecs.
+
+    ``shapes_tree`` (same structure, leaves with .shape) enables the
+    divisibility fallback; without it the mapping is unchecked.
+    """
+    def _is_axes(x):
+        return isinstance(x, tuple) and all(
+            a is None or isinstance(a, str) for a in x)
+
+    if shapes_tree is None:
+        return jax.tree.map(
+            lambda axes: P(*[_present(mesh, rules.mesh_axes(a))
+                             for a in axes]),
+            specs_tree, is_leaf=_is_axes)
+
+    paths = {id(l): "/".join(str(k) for k in p)
+             for p, l in jax.tree_util.tree_flatten_with_path(specs_tree)[0]}
+
+    def _map(path, axes, shaped):
+        return divisible_fallback(mesh, shaped.shape, axes, rules,
+                                  path=jax.tree_util.keystr(path))
+
+    return jax.tree_util.tree_map_with_path(
+        _map, specs_tree, shapes_tree, is_leaf=lambda x: _is_axes(x))
+
+
+def specs_to_shardings(spec_tree, mesh: Mesh):
+    return jax.tree.map(
+        lambda s: NamedSharding(mesh, s),
+        spec_tree, is_leaf=lambda x: isinstance(x, P))
+
+
+def constrain(x, mesh: Mesh, rules: LogicalRules, logical):
+    """with_sharding_constraint by logical names (with fallback)."""
+    spec = divisible_fallback(mesh, x.shape, logical, rules, path="act")
+    return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, spec))
+
+
+class ActivationSharder:
+    """Carries (mesh, rules) so model code can hint activation shardings."""
+
+    def __init__(self, mesh: Optional[Mesh] = None,
+                 rules: Optional[LogicalRules] = None):
+        self.mesh = mesh
+        self.rules = rules
+
+    def __call__(self, x, *logical):
+        if self.mesh is None or self.rules is None:
+            return x
+        # Trees pass through untouched unless leaf.
+        if not hasattr(x, "shape"):
+            return x
+        if len(logical) != x.ndim:
+            return x
+        return constrain(x, self.mesh, self.rules, logical)
+
+
+NULL_SHARDER = ActivationSharder(None, None)

@@ -1,0 +1,107 @@
+"""Architecture registry: ``--arch <id>`` resolution, reduced smoke
+configs, and per-(arch x shape) input_specs for the dry-run."""
+from __future__ import annotations
+
+import dataclasses
+import importlib
+from typing import Dict, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.shapes import SHAPES, ShapeCell, shape_applicable
+from repro.models.config import ModelConfig, MoEConfig, SSMConfig
+
+ARCH_MODULES = {
+    "qwen3-moe-30b-a3b": "repro.configs.qwen3_moe_30b_a3b",
+    "olmoe-1b-7b": "repro.configs.olmoe_1b_7b",
+    "yi-6b": "repro.configs.yi_6b",
+    "qwen3-32b": "repro.configs.qwen3_32b",
+    "h2o-danube-1.8b": "repro.configs.h2o_danube_1_8b",
+    "qwen2-7b": "repro.configs.qwen2_7b",
+    "qwen2-vl-72b": "repro.configs.qwen2_vl_72b",
+    "jamba-v0.1-52b": "repro.configs.jamba_v0_1_52b",
+    "whisper-base": "repro.configs.whisper_base",
+    "mamba2-2.7b": "repro.configs.mamba2_2_7b",
+}
+
+FIELD_APPS = ["nerf", "nsdf", "gia", "nvr"]
+FIELD_ENCODINGS = ["hash", "dense", "tiled"]
+
+
+def list_archs():
+    return list(ARCH_MODULES)
+
+
+def get_config(arch: str) -> ModelConfig:
+    mod = importlib.import_module(ARCH_MODULES[arch])
+    return mod.CONFIG
+
+
+def reduced_config(arch: str) -> ModelConfig:
+    """Same family/feature set, laptop-scale: used by smoke tests."""
+    cfg = get_config(arch)
+    changes = dict(
+        n_layers=max(2, (cfg.attn_every or 1)
+                     * (2 if not cfg.attn_every else 1)),
+        d_model=64, n_heads=4, n_kv_heads=min(cfg.n_kv_heads, 2),
+        head_dim=16, d_ff=128, vocab_size=256,
+    )
+    if cfg.attn_every:   # keep one full period
+        changes["n_layers"] = cfg.attn_every
+        changes["attn_offset"] = min(cfg.attn_offset, cfg.attn_every - 1)
+    if cfg.n_kv_heads == cfg.n_heads:     # preserve MHA
+        changes["n_kv_heads"] = 4
+    if cfg.moe is not None:
+        changes["moe"] = dataclasses.replace(
+            cfg.moe, n_experts=8, top_k=2, d_expert=32)
+    if cfg.ssm is not None:
+        changes["ssm"] = dataclasses.replace(
+            cfg.ssm, d_state=16, head_dim=8, chunk=16)
+    if cfg.m_rope_sections is not None:
+        changes["m_rope_sections"] = (2, 3, 3)   # sums to head_dim/2
+    if cfg.swa_window is not None:
+        changes["swa_window"] = 16
+    return dataclasses.replace(cfg, **changes)
+
+
+def input_specs(cfg: ModelConfig, shape: str) -> Dict:
+    """ShapeDtypeStruct stand-ins for every model input of this cell.
+    No device allocation — exactly what jit(...).lower(**specs) needs."""
+    cell = SHAPES[shape]
+    b, s = cell.global_batch, cell.seq_len
+    i32 = jnp.int32
+    f = cfg.adtype
+    sds = jax.ShapeDtypeStruct
+
+    if cell.step == "train":
+        if cfg.is_encdec:
+            return {"batch": {
+                "enc_embeddings": sds((b, s, cfg.d_model), f),
+                "tokens": sds((b, s), i32)}}
+        if cfg.frontend == "vision":
+            return {"batch": {
+                "embeddings": sds((b, s, cfg.d_model), f),
+                "labels": sds((b, s), i32),
+                "positions": sds((3, b, s), i32)}}
+        return {"batch": {"tokens": sds((b, s), i32)}}
+
+    if cell.step == "prefill":
+        if cfg.is_encdec:
+            return {"batch": {
+                "enc_embeddings": sds((b, s, cfg.d_model), f),
+                "tokens": sds((b, s), i32)}}
+        if cfg.frontend == "vision":
+            return {"batch": {
+                "embeddings": sds((b, s, cfg.d_model), f),
+                "positions": sds((3, b, s), i32)}}
+        return {"batch": {"tokens": sds((b, s), i32)}}
+
+    # decode: one new token against a cache of s tokens
+    return {"tokens": sds((b, 1), i32),
+            "pos": sds((), i32)}
+
+
+def field_config(app: str, encoding: str):
+    from repro.core.fields import make_field_config
+    return make_field_config(app, encoding)

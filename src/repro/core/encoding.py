@@ -1,0 +1,204 @@
+"""Input encodings — the paper's first bottleneck kernel (Section II-A).
+
+Implements the three parametric encodings studied by the paper plus the
+fixed-function encodings it references:
+
+  * multi-resolution hashgrid   (instant-NGP, Eq. 1 hash, L=16)
+  * multi-resolution densegrid  (1:1 mapping, L=8)
+  * low-resolution densegrid    ("tiled", L=2, F=8, Nmin=128)
+  * frequency (sin/cos) encoding        [vanilla-NeRF]
+  * spherical harmonics direction encoding (degree 4 -> 16 features)
+
+This module is the pure-JAX implementation: it is both the production XLA
+path for meshes without Pallas and the oracle for the Pallas kernels in
+``repro.kernels``. Tables are stored uniformly as (L, T, F) — the paper
+bounds trainable encoding parameters by T*L*F (Section II-A); uniform
+allocation keeps the kernel BlockSpecs and sharding rules shape-static.
+
+The hash (Eq. 1): h(x) = (xor_i x_i * pi_i) mod T, with T a power of two so
+``mod`` is an AND mask — the same modulo->shift strength reduction the NGPC
+hardware applies (Section V).
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.common.param import Boxed, uniform_init
+
+# instant-NGP's spatial hash primes (pi_1 = 1 keeps coherence in x).
+HASH_PRIMES = (1, 2654435761, 805459861, 3674653429)
+
+
+@dataclasses.dataclass(frozen=True)
+class GridConfig:
+    """Parameters exactly as in the paper's Table I."""
+    dim: int = 3            # input dimensionality d
+    n_levels: int = 16      # L
+    n_features: int = 2     # F
+    log2_table_size: int = 19  # T = 2**log2_table_size
+    base_resolution: int = 16  # Nmin
+    growth: float = 1.51572    # b
+    kind: str = "hash"      # 'hash' | 'dense' | 'tiled'
+
+    @property
+    def table_size(self) -> int:
+        return 1 << self.log2_table_size
+
+    @property
+    def out_dim(self) -> int:
+        return self.n_levels * self.n_features
+
+    def level_resolution(self, level: int) -> int:
+        return int(math.floor(self.base_resolution * self.growth ** level))
+
+    def level_is_hashed(self, level: int) -> bool:
+        """Dense 1:1 mapping while the level's grid fits in T, else hash."""
+        if self.kind in ("dense", "tiled"):
+            return False
+        n = self.level_resolution(level)
+        return (n + 1) ** self.dim > self.table_size
+
+    def params_bound(self) -> int:
+        return self.table_size * self.n_levels * self.n_features
+
+
+# Table I rows -> GridConfig
+def hashgrid_config(dim=3, growth=1.51572, log2_T=19) -> GridConfig:
+    return GridConfig(dim=dim, n_levels=16, n_features=2, log2_table_size=log2_T,
+                      base_resolution=16, growth=growth, kind="hash")
+
+
+def densegrid_config(dim=3, log2_T=19) -> GridConfig:
+    return GridConfig(dim=dim, n_levels=8, n_features=2, log2_table_size=log2_T,
+                      base_resolution=16, growth=1.405, kind="dense")
+
+
+def tiledgrid_config(dim=3, log2_T=19) -> GridConfig:
+    return GridConfig(dim=dim, n_levels=2, n_features=8, log2_table_size=log2_T,
+                      base_resolution=128, growth=1.0, kind="tiled")
+
+
+def init_grid(key, cfg: GridConfig, dtype=jnp.float32) -> Boxed:
+    """instant-NGP initializes features U(-1e-4, 1e-4)."""
+    tables = uniform_init(
+        key, (cfg.n_levels, cfg.table_size, cfg.n_features), dtype=dtype)
+    return Boxed(tables, ("level", "table", "feature"))
+
+
+def _corner_offsets(dim: int) -> np.ndarray:
+    """(2^d, d) binary corner offsets of the surrounding cell."""
+    return np.array(
+        [[(c >> i) & 1 for i in range(dim)] for c in range(1 << dim)],
+        dtype=np.int32)
+
+
+def hash_index(coords: jnp.ndarray, table_size: int) -> jnp.ndarray:
+    """Eq. 1. coords (..., d) int32 -> (...,) int32 in [0, T).
+
+    T is a power of two for every configuration in the paper, so the modulo
+    strength-reduces to a bitwise AND — the NGPC 'modulo as shift' trick.
+    """
+    dim = coords.shape[-1]
+    acc = coords[..., 0].astype(jnp.uint32) * jnp.uint32(HASH_PRIMES[0])
+    for i in range(1, dim):
+        acc = acc ^ (coords[..., i].astype(jnp.uint32)
+                     * jnp.uint32(HASH_PRIMES[i]))
+    return (acc & jnp.uint32(table_size - 1)).astype(jnp.int32)
+
+
+def dense_index(coords: jnp.ndarray, resolution: int,
+                table_size: int) -> jnp.ndarray:
+    """1:1 row-major mapping for dense/tiled levels; wraps into T."""
+    dim = coords.shape[-1]
+    stride = 1
+    acc = jnp.zeros(coords.shape[:-1], dtype=jnp.uint32)
+    for i in range(dim):
+        acc = acc + coords[..., i].astype(jnp.uint32) * jnp.uint32(stride)
+        stride *= resolution + 1
+    # Table is T-bounded: for levels whose dense grid exceeds T the paper's
+    # 'TiledGrid' wraps (tiles) the coordinates. T is a power of two.
+    return (acc & jnp.uint32(table_size - 1)).astype(jnp.int32)
+
+
+def encode_level(points: jnp.ndarray, table: jnp.ndarray, level: int,
+                 cfg: GridConfig) -> jnp.ndarray:
+    """Encode one resolution level: lookup 2^d corners + d-linear interp.
+
+    points: (B, d) in [0, 1]; table: (T, F) -> (B, F).
+    """
+    res = cfg.level_resolution(level)
+    pos = points.astype(jnp.float32) * res
+    cell = jnp.floor(pos)
+    frac = pos - cell
+    cell = jnp.clip(cell.astype(jnp.int32), 0, res - 1)
+
+    offsets = _corner_offsets(cfg.dim)  # (C, d) static
+    out = jnp.zeros((points.shape[0], cfg.n_features), jnp.float32)
+    for c in range(offsets.shape[0]):
+        corner = cell + offsets[c][None, :]           # (B, d)
+        if cfg.level_is_hashed(level):
+            idx = hash_index(corner, cfg.table_size)
+        else:
+            idx = dense_index(corner, res, cfg.table_size)
+        feats = jnp.take(table, idx, axis=0)          # (B, F) gather
+        w = jnp.prod(
+            jnp.where(offsets[c][None, :] == 1, frac, 1.0 - frac), axis=-1)
+        out = out + w[:, None] * feats.astype(jnp.float32)
+    return out
+
+
+def grid_encode(points: jnp.ndarray, tables: jnp.ndarray,
+                cfg: GridConfig) -> jnp.ndarray:
+    """Full multi-resolution encoding: (B, d) -> (B, L*F).
+
+    Levels are unrolled (<=16) — on the NGPC each level has a dedicated
+    engine; on TPU the levels vectorize across the VPU within one chip while
+    the *pixels* shard across chips (see DESIGN.md §2).
+    """
+    feats = [encode_level(points, tables[l], l, cfg)
+             for l in range(cfg.n_levels)]
+    return jnp.concatenate(feats, axis=-1)
+
+
+# ----------------------------------------------------------------------------
+# Fixed-function encodings (paper §II-A.1)
+# ----------------------------------------------------------------------------
+
+def frequency_encode(x: jnp.ndarray, n_freqs: int = 10) -> jnp.ndarray:
+    """vanilla-NeRF sin/cos encoding: (..., d) -> (..., d*2*n_freqs)."""
+    freqs = (2.0 ** jnp.arange(n_freqs)) * jnp.pi
+    ang = x[..., None] * freqs            # (..., d, K)
+    enc = jnp.concatenate([jnp.sin(ang), jnp.cos(ang)], axis=-1)
+    return enc.reshape(*x.shape[:-1], x.shape[-1] * 2 * n_freqs)
+
+
+def sh_encode(dirs: jnp.ndarray) -> jnp.ndarray:
+    """Real spherical harmonics, degree 4 -> 16 features (instant-NGP's
+    direction encoding; the paper's Color model '3-[Composite]->16+16')."""
+    x, y, z = dirs[..., 0], dirs[..., 1], dirs[..., 2]
+    xx, yy, zz = x * x, y * y, z * z
+    xy, yz, xz = x * y, y * z, x * z
+    return jnp.stack([
+        0.28209479177387814 * jnp.ones_like(x),
+        -0.48860251190291987 * y,
+        0.48860251190291987 * z,
+        -0.48860251190291987 * x,
+        1.0925484305920792 * xy,
+        -1.0925484305920792 * yz,
+        0.94617469575755997 * zz - 0.31539156525251999,
+        -1.0925484305920792 * xz,
+        0.54627421529603959 * (xx - yy),
+        0.59004358992664352 * y * (-3.0 * xx + yy),
+        2.8906114426405538 * xy * z,
+        0.45704579946446572 * y * (1.0 - 5.0 * zz),
+        0.3731763325901154 * z * (5.0 * zz - 3.0),
+        0.45704579946446572 * x * (1.0 - 5.0 * zz),
+        1.4453057213202769 * z * (xx - yy),
+        0.59004358992664352 * x * (-xx + 3.0 * yy),
+    ], axis=-1)

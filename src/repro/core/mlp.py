@@ -1,0 +1,55 @@
+"""Fully-fused tiny MLPs — the paper's second bottleneck kernel.
+
+Per Table I / tiny-cuda-nn: no biases ("Unlike standard MLPs the
+fully-fused MLPs do not have any explicit biases"), ReLU hidden
+activations, linear output. Hidden width is 64 for every application —
+which is why the NGPC MLP engine is a 64x64 MAC array; on TPU the widths
+are padded to the 128-lane MXU inside the Pallas kernel
+(``repro.kernels.fused_mlp``), while this XLA path keeps logical shapes.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.common.param import Boxed, KeyGen, scaled_init
+
+
+@dataclasses.dataclass(frozen=True)
+class MLPConfig:
+    in_dim: int
+    hidden_dim: int = 64
+    n_hidden: int = 3          # Table I 'layers='
+    out_dim: int = 16
+
+
+def init_mlp(key, cfg: MLPConfig, dtype=jnp.float32) -> Dict:
+    kg = KeyGen(key)
+    params = {
+        "w_in": Boxed(scaled_init(kg(), (cfg.in_dim, cfg.hidden_dim),
+                                  dtype=dtype), ("feature", "width")),
+        "w_out": Boxed(scaled_init(kg(), (cfg.hidden_dim, cfg.out_dim),
+                                   dtype=dtype), ("width", "feature")),
+    }
+    if cfg.n_hidden > 1:
+        hidden = jax.vmap(
+            lambda k: scaled_init(k, (cfg.hidden_dim, cfg.hidden_dim),
+                                  dtype=dtype)
+        )(jax.random.split(kg(), cfg.n_hidden - 1))
+        params["w_hidden"] = Boxed(hidden, ("layers", "width", "width"))
+    return params
+
+
+def apply_mlp(params: Dict, x: jnp.ndarray, cfg: MLPConfig) -> jnp.ndarray:
+    """(B, in_dim) -> (B, out_dim); f32 accumulation on the MXU."""
+    h = jnp.maximum(
+        jnp.dot(x, params["w_in"], preferred_element_type=jnp.float32), 0.0)
+    if cfg.n_hidden > 1:
+        def body(h, w):
+            return jnp.maximum(
+                jnp.dot(h, w, preferred_element_type=jnp.float32), 0.0), None
+        h, _ = jax.lax.scan(body, h, params["w_hidden"])
+    return jnp.dot(h, params["w_out"], preferred_element_type=jnp.float32)

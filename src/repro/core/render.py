@@ -1,0 +1,117 @@
+"""Ray generation, sampling, and volume compositing.
+
+These are the paper's 'pre-processing' and 'post-processing' kernels — the
+ones it fuses in Vulkan for a ~9.94x kernel-level win (Section I). Here they
+are JAX functions that XLA fuses; the Pallas ``ray_march`` kernel fuses
+sampling+compositing explicitly for the TPU path.
+
+Compositing follows classical emission-absorption volume rendering
+(paper refs [7], [11], [40]): alpha_i = 1 - exp(-sigma_i * dt_i),
+T_i = prod_{j<i}(1 - alpha_j), C = sum_i T_i * alpha_i * c_i.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class Camera:
+    """Pinhole camera; pose is camera-to-world."""
+    height: int
+    width: int
+    focal: float
+    c2w: jnp.ndarray  # (4, 4)
+
+
+def look_at(eye, target, up=(0.0, 0.0, 1.0)) -> jnp.ndarray:
+    eye = jnp.asarray(eye, jnp.float32)
+    target = jnp.asarray(target, jnp.float32)
+    up = jnp.asarray(up, jnp.float32)
+    fwd = target - eye
+    fwd = fwd / jnp.linalg.norm(fwd)
+    right = jnp.cross(fwd, up)
+    right = right / jnp.linalg.norm(right)
+    down = jnp.cross(fwd, right)
+    c2w = jnp.eye(4, dtype=jnp.float32)
+    c2w = c2w.at[:3, 0].set(right).at[:3, 1].set(down).at[:3, 2].set(fwd)
+    return c2w.at[:3, 3].set(eye)
+
+
+def make_rays(cam: Camera, pixel_ids: jnp.ndarray
+              ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """pixel_ids (R,) flat indices -> (origins (R,3), dirs (R,3))."""
+    py = (pixel_ids // cam.width).astype(jnp.float32)
+    px = (pixel_ids % cam.width).astype(jnp.float32)
+    x = (px - cam.width * 0.5 + 0.5) / cam.focal
+    y = (py - cam.height * 0.5 + 0.5) / cam.focal
+    d_cam = jnp.stack([x, y, jnp.ones_like(x)], axis=-1)
+    dirs = d_cam @ cam.c2w[:3, :3].T
+    dirs = dirs / jnp.linalg.norm(dirs, axis=-1, keepdims=True)
+    origins = jnp.broadcast_to(cam.c2w[:3, 3], dirs.shape)
+    return origins, dirs
+
+
+def sample_along_rays(origins: jnp.ndarray, dirs: jnp.ndarray,
+                      near: float, far: float, n_samples: int,
+                      rng: Optional[jax.Array] = None
+                      ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Stratified sampling -> points (R, S, 3), dts (R, S)."""
+    t = jnp.linspace(near, far, n_samples + 1)
+    lo, hi = t[:-1], t[1:]
+    if rng is not None:
+        u = jax.random.uniform(rng, (origins.shape[0], n_samples))
+    else:
+        u = 0.5
+    ts = lo[None, :] + (hi - lo)[None, :] * u          # (R, S)
+    dts = jnp.diff(t)[None, :] * jnp.ones_like(ts)
+    pts = origins[:, None, :] + ts[..., None] * dirs[:, None, :]
+    return pts, dts
+
+
+def composite(rgb: jnp.ndarray, sigma: jnp.ndarray, dts: jnp.ndarray
+              ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Emission-absorption integration.
+
+    rgb (R, S, 3), sigma (R, S), dts (R, S) -> (pixel (R, 3), opacity (R,)).
+    """
+    alpha = 1.0 - jnp.exp(-sigma * dts)                       # (R, S)
+    trans = jnp.cumprod(1.0 - alpha + 1e-10, axis=-1)
+    trans = jnp.concatenate(
+        [jnp.ones_like(trans[:, :1]), trans[:, :-1]], axis=-1)
+    w = trans * alpha                                          # (R, S)
+    pixel = jnp.sum(w[..., None] * rgb, axis=-2)
+    return pixel, jnp.sum(w, axis=-1)
+
+
+def normalize_to_unit(points: jnp.ndarray, lo: float = -2.0,
+                      hi: float = 2.0) -> jnp.ndarray:
+    """World coords -> [0,1]^d for the grid encoding (the paper's
+    'normalized input coordinates' entering the input FIFO)."""
+    return jnp.clip((points - lo) / (hi - lo), 0.0, 1.0)
+
+
+def render_rays(field_apply: Callable, origins: jnp.ndarray,
+                dirs: jnp.ndarray, *, near: float = 0.5, far: float = 4.5,
+                n_samples: int = 32, rng: Optional[jax.Array] = None,
+                use_pallas_composite: bool = False) -> jnp.ndarray:
+    """Full per-ray pipeline: sample -> field -> composite. (R,) rays.
+
+    ``field_apply(points (N,3), dirs (N,3)) -> (N, 4) [rgb, sigma]``.
+    """
+    n_rays = origins.shape[0]
+    pts, dts = sample_along_rays(origins, dirs, near, far, n_samples, rng)
+    flat_pts = normalize_to_unit(pts.reshape(-1, 3))
+    flat_dirs = jnp.repeat(dirs, n_samples, axis=0)
+    out = field_apply(flat_pts, flat_dirs)                 # (R*S, 4)
+    out = out.reshape(n_rays, n_samples, 4)
+    rgb, sigma = out[..., :3], out[..., 3]
+    if use_pallas_composite:
+        from repro.kernels.ray_march import ops as rm_ops
+        pixel, _ = rm_ops.composite(rgb, sigma, dts)
+    else:
+        pixel, _ = composite(rgb, sigma, dts)
+    return pixel

@@ -1,0 +1,119 @@
+"""Analytic ground-truth scenes for the four neural-graphics apps.
+
+No image/mesh assets ship with the container, so training targets are
+*procedural*: an infinitely-detailed synthetic 'gigapixel' image for GIA,
+analytic SDFs for NSDF, and an analytic emission-absorption volume for
+NeRF/NVR (ground-truth pixels come from compositing the analytic field with
+the same renderer the network uses — a perfectly controlled inverse-render
+benchmark)."""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import render
+
+
+# ---------------------------------------------------------------- GIA image
+def gigapixel_image(xy: jnp.ndarray) -> jnp.ndarray:
+    """Procedural high-frequency RGB image; xy (B, 2) in [0,1] -> (B, 3)."""
+    x, y = xy[..., 0], xy[..., 1]
+    r = 0.5 + 0.5 * jnp.sin(40.0 * x) * jnp.cos(31.0 * y)
+    g = 0.5 + 0.5 * jnp.sin(57.0 * x * y + 3.0 * x)
+    checker = jnp.sign(jnp.sin(87.0 * x) * jnp.sin(93.0 * y))
+    b = 0.5 + 0.25 * checker + 0.25 * jnp.sin(13.0 * (x + y))
+    return jnp.clip(jnp.stack([r, g, b], axis=-1), 0.0, 1.0)
+
+
+# ----------------------------------------------------------------- NSDF SDFs
+def sdf_sphere(p: jnp.ndarray, radius: float = 0.8) -> jnp.ndarray:
+    return jnp.linalg.norm(p, axis=-1, keepdims=True) - radius
+
+
+def sdf_torus(p: jnp.ndarray, R: float = 0.7, r: float = 0.25) -> jnp.ndarray:
+    q = jnp.stack([jnp.linalg.norm(p[..., :2], axis=-1) - R, p[..., 2]],
+                  axis=-1)
+    return (jnp.linalg.norm(q, axis=-1) - r)[..., None]
+
+
+def sdf_scene(p: jnp.ndarray) -> jnp.ndarray:
+    """Union of torus + offset sphere; p in [-1,1]^3 world coords."""
+    s = sdf_sphere(p - jnp.array([0.35, 0.0, 0.45]), 0.3)
+    t = sdf_torus(p)
+    return jnp.minimum(s, t)
+
+
+# ------------------------------------------------------- NeRF / NVR volume
+_BLOBS = jnp.array([      # x, y, z, inv_radius, density
+    [0.0, 0.0, 0.0, 4.0, 28.0],
+    [0.55, 0.2, 0.1, 7.0, 40.0],
+    [-0.4, -0.35, 0.3, 6.0, 35.0],
+    [0.1, 0.5, -0.4, 8.0, 45.0],
+])
+_COLORS = jnp.array([
+    [0.9, 0.3, 0.2],
+    [0.2, 0.8, 0.3],
+    [0.25, 0.35, 0.9],
+    [0.9, 0.8, 0.2],
+])
+
+
+def volume_field(p: jnp.ndarray, dirs: jnp.ndarray = None) -> jnp.ndarray:
+    """Analytic (rgb, sigma) field of Gaussian blobs; p (B,3) world coords.
+
+    Mild view-dependence (specular-ish dot term) exercises the NeRF color
+    MLP's direction input."""
+    d2 = jnp.sum((p[:, None, :] - _BLOBS[None, :, :3]) ** 2, axis=-1)
+    g = jnp.exp(-d2 * _BLOBS[None, :, 3] ** 2)          # (B, K)
+    sigma = jnp.sum(g * _BLOBS[None, :, 4], axis=-1, keepdims=True)
+    w = g / (jnp.sum(g, axis=-1, keepdims=True) + 1e-6)
+    rgb = w @ _COLORS                                   # (B, 3)
+    if dirs is not None:
+        spec = 0.15 * jnp.maximum(
+            dirs @ jnp.array([0.577, 0.577, 0.577]), 0.0)[:, None]
+        rgb = jnp.clip(rgb + spec, 0.0, 1.0)
+    return jnp.concatenate([rgb, sigma], axis=-1)
+
+
+def gt_render_rays(origins, dirs, *, near=0.5, far=4.5, n_samples=64,
+                   rng=None) -> jnp.ndarray:
+    """Ground-truth pixels by compositing the analytic volume."""
+    def field(p_unit, d):
+        # analytic field lives in world coords; undo the normalization
+        p_world = p_unit * 4.0 - 2.0
+        return volume_field(p_world, d)
+    return render.render_rays(field, origins, dirs, near=near, far=far,
+                              n_samples=n_samples, rng=rng)
+
+
+# ------------------------------------------------------------ batch makers
+def gia_batch(rng, n: int) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    xy = jax.random.uniform(rng, (n, 2))
+    return xy, gigapixel_image(xy)
+
+
+def nsdf_batch(rng, n: int) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Mix of near-surface and uniform samples (standard SDF training)."""
+    k_uni, k_srf, k_eps = jax.random.split(rng, 3)
+    p_uni = jax.random.uniform(k_uni, (n // 2, 3), minval=-1.0, maxval=1.0)
+    p_srf = jax.random.uniform(k_srf, (n - n // 2, 3), minval=-1.0,
+                               maxval=1.0)
+    p_srf = p_srf + 0.02 * jax.random.normal(k_eps, p_srf.shape)
+    p = jnp.concatenate([p_uni, p_srf], axis=0)
+    return (p + 1.0) / 2.0, sdf_scene(p)     # net sees [0,1]^3
+
+
+def nerf_ray_batch(rng, cam: render.Camera, n_rays: int):
+    k_pix, k_strat = jax.random.split(rng)
+    pix = jax.random.randint(k_pix, (n_rays,), 0, cam.height * cam.width)
+    origins, dirs = render.make_rays(cam, pix)
+    target = gt_render_rays(origins, dirs, rng=k_strat)
+    return origins, dirs, target
+
+
+def default_camera(height=256, width=256) -> render.Camera:
+    return render.Camera(
+        height=height, width=width, focal=0.9 * width,
+        c2w=render.look_at((2.2, 1.6, 1.8), (0.0, 0.0, 0.0)))

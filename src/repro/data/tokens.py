@@ -1,0 +1,120 @@
+"""Synthetic-but-structured LM data pipeline.
+
+Host-sharded, double-buffered, deterministic. The stream is a mixture of
+Zipfian unigrams and repeated n-gram motifs, so cross-entropy actually
+*decreases* during the example runs (unlike uniform noise) — enough
+signal to validate end-to-end training without shipping a corpus."""
+from __future__ import annotations
+
+import dataclasses
+import queue
+import threading
+from typing import Dict, Iterator, Optional
+
+import jax
+import numpy as np
+
+from repro.models.config import ModelConfig
+
+
+@dataclasses.dataclass(frozen=True)
+class DataConfig:
+    vocab_size: int
+    seq_len: int
+    global_batch: int
+    seed: int = 0
+    zipf_a: float = 1.3
+    motif_len: int = 16
+    n_motifs: int = 64
+    motif_prob: float = 0.5
+
+
+class SyntheticTokens:
+    """Deterministic infinite token stream (np RNG; host-side)."""
+
+    def __init__(self, cfg: DataConfig, host_id: int = 0, n_hosts: int = 1):
+        self.cfg = cfg
+        self.host_id, self.n_hosts = host_id, n_hosts
+        assert cfg.global_batch % n_hosts == 0
+        self.local_batch = cfg.global_batch // n_hosts
+        rng = np.random.default_rng(cfg.seed)
+        v = cfg.vocab_size
+        self.motifs = rng.integers(
+            0, v, size=(cfg.n_motifs, cfg.motif_len), dtype=np.int32)
+        ranks = np.arange(1, v + 1, dtype=np.float64)
+        p = 1.0 / ranks ** cfg.zipf_a
+        self.unigram = p / p.sum()
+
+    def batch(self, step: int) -> Dict[str, np.ndarray]:
+        """Batch for a given step (recomputable — restart-deterministic)."""
+        cfg = self.cfg
+        rng = np.random.default_rng(
+            (cfg.seed, step, self.host_id))
+        b, s = self.local_batch, cfg.seq_len
+        toks = rng.choice(len(self.unigram), size=(b, s),
+                          p=self.unigram).astype(np.int32)
+        # splice in motifs (predictable structure -> learnable signal)
+        n_splice = int(cfg.motif_prob * b * s / cfg.motif_len)
+        rows = rng.integers(0, b, n_splice)
+        cols = rng.integers(0, max(s - cfg.motif_len, 1), n_splice)
+        ids = rng.integers(0, cfg.n_motifs, n_splice)
+        for r, c, i in zip(rows, cols, ids):
+            toks[r, c:c + cfg.motif_len] = self.motifs[i]
+        return {"tokens": toks}
+
+    def __iter__(self) -> Iterator[Dict[str, np.ndarray]]:
+        step = 0
+        while True:
+            yield self.batch(step)
+            step += 1
+
+
+class Prefetcher:
+    """Background-thread prefetch (depth-N pipeline ahead of the step)."""
+
+    def __init__(self, it: Iterator, depth: int = 2,
+                 to_device=None):
+        self._q: queue.Queue = queue.Queue(maxsize=depth)
+        self._stop = threading.Event()
+        self._to_device = to_device
+
+        def work():
+            for item in it:
+                if self._stop.is_set():
+                    return
+                if self._to_device is not None:
+                    item = self._to_device(item)
+                self._q.put(item)
+
+        self._thread = threading.Thread(target=work, daemon=True)
+        self._thread.start()
+
+    def __iter__(self):
+        return self
+
+    def __next__(self):
+        return self._q.get()
+
+    def close(self):
+        self._stop.set()
+        try:
+            while True:
+                self._q.get_nowait()
+        except queue.Empty:
+            pass
+
+
+def make_lm_pipeline(cfg: ModelConfig, seq_len: int, global_batch: int,
+                     seed: int = 0, prefetch: int = 2,
+                     sharding=None) -> Iterator[Dict]:
+    data_cfg = DataConfig(vocab_size=cfg.vocab_size, seq_len=seq_len,
+                          global_batch=global_batch, seed=seed)
+    src = iter(SyntheticTokens(data_cfg))
+
+    def to_device(item):
+        if sharding is not None:
+            return {k: jax.device_put(v, sharding[k] if isinstance(
+                sharding, dict) else sharding) for k, v in item.items()}
+        return item
+
+    return Prefetcher(src, depth=prefetch, to_device=to_device)

@@ -1,0 +1,31 @@
+"""Shared Pallas kernel utilities."""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+
+def on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+def default_interpret() -> bool:
+    """Pallas TPU kernels run in interpret mode off-TPU (this container is
+    CPU-only; the TPU is the *target*, interpret validates the body)."""
+    return not on_tpu()
+
+
+def pad_batch(x: jnp.ndarray, block: int):
+    """Pad dim 0 up to a multiple of ``block``. Returns (padded, orig_n)."""
+    n = x.shape[0]
+    padded = -(-n // block) * block
+    if padded == n:
+        return x, n
+    pad = [(0, padded - n)] + [(0, 0)] * (x.ndim - 1)
+    return jnp.pad(x, pad), n
+
+
+def round_up(x: int, m: int) -> int:
+    return -(-x // m) * m

@@ -1,0 +1,2 @@
+from repro.kernels.fused_field import ops, ref
+from repro.kernels.fused_field.fused_field import fused_field_pallas

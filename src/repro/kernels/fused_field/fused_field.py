@@ -1,0 +1,135 @@
+"""Pallas TPU kernel: FUSED encoding + MLP — the Neural Fields Processor.
+
+This is the paper's headline architectural move (Section V): "fusing the
+input encoding and multi-layer perceptron engines in such a way that the
+input encoding engine directly writes the outputs to the input memory of
+the multi-layer perceptron engine". On the GPU baseline the encoding kernel
+round-trips its output through device memory (Fig. 7); the NFP eliminates
+that traffic.
+
+TPU realization: ONE ``pallas_call`` whose body is
+    gather+lerp over all L levels  (VPU, tables VMEM-resident)
+      -> concat features            (stays in VMEM scratch)
+      -> L-layer fused MLP          (MXU, weights VMEM-resident)
+so the (B, L*F) encoded features NEVER touch HBM. Per tile of B points the
+HBM traffic is exactly ``B*d*4`` in + ``B*out*4`` bytes out (plus one-time
+table/weight loads) — the Table III I/O model of the accelerator.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Sequence
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from repro.core.encoding import GridConfig, HASH_PRIMES
+from repro.core.mlp import MLPConfig
+from repro.kernels.common import round_up
+from repro.kernels.fused_mlp.fused_mlp import pad_dim
+
+
+def _encode_block(pts, tab, cfg: GridConfig, resolutions, hashed):
+    """In-kernel encode: (blk, d) + (L, T, F) -> (blk, L*F) f32."""
+    blk = pts.shape[0]
+    mask = jnp.uint32(cfg.table_size - 1)
+    corners = [tuple((c >> i) & 1 for i in range(cfg.dim))
+               for c in range(1 << cfg.dim)]
+    level_feats = []
+    for l in range(cfg.n_levels):
+        res = resolutions[l]
+        pos = pts * jnp.float32(res)
+        cell = jnp.floor(pos)
+        frac = pos - cell
+        cell = jnp.clip(cell.astype(jnp.int32), 0, res - 1)
+        acc = jnp.zeros((blk, cfg.n_features), jnp.float32)
+        for bits in corners:
+            if hashed[l]:
+                idx = ((cell[:, 0] + bits[0]).astype(jnp.uint32)
+                       * jnp.uint32(HASH_PRIMES[0]))
+                for i in range(1, cfg.dim):
+                    idx = idx ^ ((cell[:, i] + bits[i]).astype(jnp.uint32)
+                                 * jnp.uint32(HASH_PRIMES[i]))
+            else:
+                stride = 1
+                idx = jnp.zeros((blk,), jnp.uint32)
+                for i in range(cfg.dim):
+                    idx = idx + ((cell[:, i] + bits[i]).astype(jnp.uint32)
+                                 * jnp.uint32(stride))
+                    stride *= res + 1
+            idx = (idx & mask).astype(jnp.int32)
+            feats = jnp.take(tab[l], idx, axis=0)
+            w = jnp.ones((blk,), jnp.float32)
+            for i in range(cfg.dim):
+                w = w * (frac[:, i] if bits[i] else 1.0 - frac[:, i])
+            acc = acc + w[:, None] * feats.astype(jnp.float32)
+        level_feats.append(acc)
+    return jnp.concatenate(level_feats, axis=-1)
+
+
+def _field_kernel(points_ref, tables_ref, w_in_ref, w_hid_ref, w_out_ref,
+                  out_ref, *, grid_cfg: GridConfig, mlp_cfg: MLPConfig,
+                  resolutions, hashed, padded_in: int):
+    pts = points_ref[...].astype(jnp.float32)
+    tab = tables_ref[...]
+    # --- encoding engine (features stay in VMEM; no HBM round trip) ---
+    feats = _encode_block(pts, tab, grid_cfg, resolutions, hashed)
+    feats = jnp.pad(feats, ((0, 0), (0, padded_in - feats.shape[1])))
+    # --- MLP engine ---
+    h = jnp.maximum(
+        jnp.dot(feats, w_in_ref[...].astype(jnp.float32),
+                preferred_element_type=jnp.float32), 0.0)
+    for k in range(mlp_cfg.n_hidden - 1):
+        h = jnp.maximum(
+            jnp.dot(h, w_hid_ref[k].astype(jnp.float32),
+                    preferred_element_type=jnp.float32), 0.0)
+    out_ref[...] = jnp.dot(
+        h, w_out_ref[...].astype(jnp.float32),
+        preferred_element_type=jnp.float32).astype(out_ref.dtype)
+
+
+def fused_field_pallas(points: jnp.ndarray, tables: jnp.ndarray,
+                       w_in: jnp.ndarray, w_hidden: jnp.ndarray,
+                       w_out: jnp.ndarray, grid_cfg: GridConfig,
+                       mlp_cfg: MLPConfig, *, block_b: int = 512,
+                       interpret: bool = True, mxu_align: int = 128
+                       ) -> jnp.ndarray:
+    """points (B, d) -> (B, out_dim): encode + MLP, one kernel."""
+    b = points.shape[0]
+    assert b % block_b == 0, (b, block_b)
+    assert mlp_cfg.in_dim == grid_cfg.out_dim
+
+    din = round_up(mlp_cfg.in_dim, mxu_align)
+    hdim = round_up(mlp_cfg.hidden_dim, mxu_align)
+    dout = round_up(mlp_cfg.out_dim, mxu_align)
+    n_hid_stack = max(mlp_cfg.n_hidden - 1, 1)
+
+    w_in_p = pad_dim(w_in, din, hdim)
+    w_hid_p = (pad_dim(w_hidden, hdim, hdim) if mlp_cfg.n_hidden > 1
+               else jnp.zeros((1, hdim, hdim), w_in.dtype))
+    w_out_p = pad_dim(w_out, hdim, dout)
+
+    resolutions = tuple(grid_cfg.level_resolution(l)
+                        for l in range(grid_cfg.n_levels))
+    hashed = tuple(grid_cfg.level_is_hashed(l)
+                   for l in range(grid_cfg.n_levels))
+    kernel = functools.partial(
+        _field_kernel, grid_cfg=grid_cfg, mlp_cfg=mlp_cfg,
+        resolutions=resolutions, hashed=hashed, padded_in=din)
+
+    out = pl.pallas_call(
+        kernel,
+        grid=(b // block_b,),
+        in_specs=[
+            pl.BlockSpec((block_b, grid_cfg.dim), lambda i: (i, 0)),
+            pl.BlockSpec(tables.shape, lambda i: (0, 0, 0)),   # grid_sram
+            pl.BlockSpec((din, hdim), lambda i: (0, 0)),
+            pl.BlockSpec((n_hid_stack, hdim, hdim), lambda i: (0, 0, 0)),
+            pl.BlockSpec((hdim, dout), lambda i: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((block_b, dout), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((b, dout), jnp.float32),
+        interpret=interpret,
+    )(points, tables, w_in_p, w_hid_p, w_out_p)
+    return out[:, :mlp_cfg.out_dim]

@@ -1,0 +1,60 @@
+"""Public wrapper: route field evaluation through the NFP kernel.
+
+For NeRF the fused kernel computes the density path (encode + density MLP);
+the color MLP consumes the SH-encoded direction via the fused_mlp kernel —
+two pallas_calls, matching the two NFP engine passes the paper schedules
+for NeRF's two MLPs (Fig. 4)."""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import encoding as enc
+from repro.core.fields import FieldConfig
+from repro.kernels.common import default_interpret, pad_batch
+from repro.kernels.fused_field.fused_field import fused_field_pallas
+from repro.kernels.fused_mlp import ops as mlp_ops
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("grid_cfg", "mlp_cfg", "block_b",
+                                    "interpret"))
+def field(points, tables, mlp_params, grid_cfg, mlp_cfg, *,
+          block_b: int = 512, interpret: bool | None = None):
+    if interpret is None:
+        interpret = default_interpret()
+    block_b = min(block_b, max(8, points.shape[0]))
+    pts, n = pad_batch(points, block_b)
+    w_hidden = mlp_params.get(
+        "w_hidden", jnp.zeros((1, mlp_cfg.hidden_dim, mlp_cfg.hidden_dim),
+                              mlp_params["w_in"].dtype))
+    out = fused_field_pallas(pts, tables, mlp_params["w_in"], w_hidden,
+                             mlp_params["w_out"], grid_cfg, mlp_cfg,
+                             block_b=block_b, interpret=interpret)
+    return out[:n]
+
+
+def apply_field_fused(params, cfg: FieldConfig, points, dirs=None,
+                      interpret: bool | None = None):
+    """Drop-in for core.fields.apply_field(..., use_pallas=True)."""
+    if cfg.app == "nerf":
+        dfeat = field(points, params["grid"], params["density_mlp"],
+                      cfg.grid, cfg.density_mlp, interpret=interpret)
+        sigma = jnp.exp(dfeat[:, :1])
+        color_in = jnp.concatenate([enc.sh_encode(dirs), dfeat], axis=-1)
+        rgb = jax.nn.sigmoid(
+            mlp_ops.mlp(params["mlp"], color_in, cfg.mlp,
+                        interpret=interpret))
+        return jnp.concatenate([rgb, sigma], axis=-1)
+
+    out = field(points, params["grid"], params["mlp"], cfg.grid, cfg.mlp,
+                interpret=interpret)
+    if cfg.app == "gia":
+        return jax.nn.sigmoid(out)
+    if cfg.app == "nvr":
+        rgb = jax.nn.sigmoid(out[:, :3])
+        sigma = jnp.exp(out[:, 3:])
+        return jnp.concatenate([rgb, sigma], axis=-1)
+    return out

@@ -1,0 +1,8 @@
+"""Pure-jnp oracle: encode -> MLP through the core library."""
+from repro.core.encoding import grid_encode
+from repro.core.mlp import apply_mlp
+
+
+def field_ref(points, tables, mlp_params, grid_cfg, mlp_cfg):
+    feats = grid_encode(points, tables, grid_cfg)
+    return apply_mlp(mlp_params, feats, mlp_cfg)

@@ -1,0 +1,2 @@
+from repro.kernels.fused_mlp import ops, ref
+from repro.kernels.fused_mlp.fused_mlp import fused_mlp_pallas

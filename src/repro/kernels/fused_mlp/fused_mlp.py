@@ -1,0 +1,87 @@
+"""Pallas TPU kernel: fully-fused tiny MLP (the NFP MLP engine, Sec. V).
+
+Hardware mapping (DESIGN.md §2):
+  * 64x64 MAC array        -> MXU matmuls with f32 accumulation; the 64-wide
+    layers are zero-padded to the 128-lane MXU tile inside the kernel
+    (``pad_dim``), so every matmul is hardware-aligned.
+  * activation SRAM        -> hidden activations live in VMEM registers for
+    the whole layer loop; only the final output tile is written to HBM.
+  * weight residency       -> all layer weights are pinned VMEM blocks
+    (index_map constant across the batch grid), loaded once per kernel.
+
+Grid: 1-D over row blocks of the batch. Layers are unrolled (<=5 matmuls).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from repro.core.mlp import MLPConfig
+from repro.kernels.common import round_up
+
+
+def _mlp_kernel(x_ref, w_in_ref, w_hid_ref, w_out_ref, out_ref, *,
+                n_hidden: int):
+    h = x_ref[...].astype(jnp.float32)
+    h = jnp.maximum(
+        jnp.dot(h, w_in_ref[...].astype(jnp.float32),
+                preferred_element_type=jnp.float32), 0.0)
+    for k in range(n_hidden - 1):            # unrolled: all weights in VMEM
+        h = jnp.maximum(
+            jnp.dot(h, w_hid_ref[k].astype(jnp.float32),
+                    preferred_element_type=jnp.float32), 0.0)
+    out_ref[...] = jnp.dot(
+        h, w_out_ref[...].astype(jnp.float32),
+        preferred_element_type=jnp.float32).astype(out_ref.dtype)
+
+
+def pad_dim(w: jnp.ndarray, rows: int, cols: int) -> jnp.ndarray:
+    """Zero-pad a weight matrix (trailing 2 dims) to MXU-aligned sizes."""
+    pr, pc = rows - w.shape[-2], cols - w.shape[-1]
+    pad = [(0, 0)] * (w.ndim - 2) + [(0, pr), (0, pc)]
+    return jnp.pad(w, pad)
+
+
+def fused_mlp_pallas(x: jnp.ndarray, w_in: jnp.ndarray, w_hidden: jnp.ndarray,
+                     w_out: jnp.ndarray, cfg: MLPConfig, *,
+                     block_b: int = 512, interpret: bool = True,
+                     mxu_align: int = 128) -> jnp.ndarray:
+    """x (B, in_dim); weights as in core.mlp.init_mlp -> (B, out_dim).
+
+    B must be a multiple of block_b (ops.py pads). Feature dims are padded
+    to ``mxu_align`` lanes; zero padding is exact (ReLU(0)=0, 0-rows
+    contribute nothing)."""
+    b = x.shape[0]
+    assert b % block_b == 0, (b, block_b)
+    din = round_up(cfg.in_dim, mxu_align)
+    h = round_up(cfg.hidden_dim, mxu_align)
+    dout = round_up(cfg.out_dim, mxu_align)
+    n_hid_stack = max(cfg.n_hidden - 1, 1)
+
+    xp = jnp.pad(x, ((0, 0), (0, din - cfg.in_dim)))
+    w_in_p = pad_dim(w_in, din, h)
+    if cfg.n_hidden > 1:
+        w_hid_p = pad_dim(w_hidden, h, h)
+    else:  # placeholder, never read
+        w_hid_p = jnp.zeros((1, h, h), w_in.dtype)
+    w_out_p = pad_dim(w_out, h, dout)
+
+    kernel = functools.partial(_mlp_kernel, n_hidden=cfg.n_hidden)
+    out = pl.pallas_call(
+        kernel,
+        grid=(b // block_b,),
+        in_specs=[
+            pl.BlockSpec((block_b, din), lambda i: (i, 0)),
+            pl.BlockSpec((din, h), lambda i: (0, 0)),
+            pl.BlockSpec((n_hid_stack, h, h), lambda i: (0, 0, 0)),
+            pl.BlockSpec((h, dout), lambda i: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((block_b, dout), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((b, dout), jnp.float32),
+        interpret=interpret,
+    )(xp, w_in_p, w_hid_p, w_out_p)
+    return out[:, :cfg.out_dim]

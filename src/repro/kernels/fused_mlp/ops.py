@@ -1,0 +1,26 @@
+"""Jitted public wrapper for the fused MLP kernel."""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.mlp import MLPConfig
+from repro.kernels.common import default_interpret, pad_batch
+from repro.kernels.fused_mlp.fused_mlp import fused_mlp_pallas
+
+
+@functools.partial(jax.jit, static_argnames=("cfg", "block_b", "interpret"))
+def mlp(params, x: jnp.ndarray, cfg: MLPConfig, *, block_b: int = 512,
+        interpret: bool | None = None) -> jnp.ndarray:
+    if interpret is None:
+        interpret = default_interpret()
+    block_b = min(block_b, max(8, x.shape[0]))
+    xp, n = pad_batch(x, block_b)
+    w_hidden = params.get("w_hidden",
+                          jnp.zeros((1, cfg.hidden_dim, cfg.hidden_dim),
+                                    params["w_in"].dtype))
+    out = fused_mlp_pallas(xp, params["w_in"], w_hidden, params["w_out"],
+                           cfg, block_b=block_b, interpret=interpret)
+    return out[:n]

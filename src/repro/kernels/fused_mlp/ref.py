@@ -1,0 +1,6 @@
+"""Pure-jnp oracle: the core library's MLP."""
+from repro.core.mlp import apply_mlp
+
+
+def mlp_ref(params, x, cfg):
+    return apply_mlp(params, x, cfg)

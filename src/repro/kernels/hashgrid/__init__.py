@@ -1,0 +1,2 @@
+from repro.kernels.hashgrid import ops, ref
+from repro.kernels.hashgrid.hashgrid import hashgrid_encode_pallas

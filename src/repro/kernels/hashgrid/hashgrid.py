@@ -1,0 +1,94 @@
+"""Pallas TPU kernel: multi-resolution grid encoding (the NFP input
+encoding engine, Section V / Fig. 9-a).
+
+Hardware mapping (DESIGN.md §2):
+  * ``grid_sram``  -> the full (L, T, F) table stack is a VMEM-resident
+    block (index_map pins it for every grid step, so Mosaic keeps it live
+    across the whole batch — the 'cache once, look up the entire frame'
+    policy of the paper).
+  * 16 level engines -> the level loop is unrolled in-kernel; each level's
+    gather+lerp vectorizes on the VPU.
+  * modulo -> shift  -> ``& (T-1)`` bitmask (T is a power of two).
+  * input FIFO       -> the batch grid dimension; Pallas double-buffers the
+    HBM->VMEM point tile fetch against compute of the previous tile.
+
+Grid: 1-D over batches of ``block_b`` points. Each step encodes block_b
+points across all L levels and writes a (block_b, L*F) tile.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Sequence
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from repro.core.encoding import GridConfig, HASH_PRIMES
+
+
+def _encode_kernel(points_ref, tables_ref, out_ref, *, cfg: GridConfig,
+                   resolutions: Sequence[int], hashed: Sequence[bool]):
+    pts = points_ref[...].astype(jnp.float32)          # (blk, d)
+    tab = tables_ref[...]                              # (L, T, F) in VMEM
+    blk = pts.shape[0]
+    mask = jnp.uint32(cfg.table_size - 1)              # modulo -> AND
+    # corner offsets as static python bit tuples (no captured constants)
+    corners = [tuple((c >> i) & 1 for i in range(cfg.dim))
+               for c in range(1 << cfg.dim)]
+
+    for l in range(cfg.n_levels):                      # the 16 engines
+        res = resolutions[l]
+        pos = pts * jnp.float32(res)
+        cell = jnp.floor(pos)
+        frac = pos - cell
+        cell = jnp.clip(cell.astype(jnp.int32), 0, res - 1)
+        acc = jnp.zeros((blk, cfg.n_features), jnp.float32)
+        for bits in corners:                           # 2^d corners
+            if hashed[l]:
+                idx = ((cell[:, 0] + bits[0]).astype(jnp.uint32)
+                       * jnp.uint32(HASH_PRIMES[0]))
+                for i in range(1, cfg.dim):
+                    idx = idx ^ ((cell[:, i] + bits[i]).astype(jnp.uint32)
+                                 * jnp.uint32(HASH_PRIMES[i]))
+            else:
+                stride = 1
+                idx = jnp.zeros((blk,), jnp.uint32)
+                for i in range(cfg.dim):
+                    idx = idx + ((cell[:, i] + bits[i]).astype(jnp.uint32)
+                                 * jnp.uint32(stride))
+                    stride *= res + 1
+            idx = (idx & mask).astype(jnp.int32)
+            feats = jnp.take(tab[l], idx, axis=0)      # VMEM gather
+            w = jnp.ones((blk,), jnp.float32)
+            for i in range(cfg.dim):
+                w = w * (frac[:, i] if bits[i] else 1.0 - frac[:, i])
+            acc = acc + w[:, None] * feats.astype(jnp.float32)
+        out_ref[:, l * cfg.n_features:(l + 1) * cfg.n_features] = (
+            acc.astype(out_ref.dtype))
+
+
+def hashgrid_encode_pallas(points: jnp.ndarray, tables: jnp.ndarray,
+                           cfg: GridConfig, *, block_b: int = 1024,
+                           interpret: bool = True) -> jnp.ndarray:
+    """points (B, d) in [0,1], tables (L, T, F) -> (B, L*F).
+
+    B must be a multiple of block_b (ops.py pads)."""
+    b = points.shape[0]
+    assert b % block_b == 0, (b, block_b)
+    resolutions = tuple(cfg.level_resolution(l) for l in range(cfg.n_levels))
+    hashed = tuple(cfg.level_is_hashed(l) for l in range(cfg.n_levels))
+    kernel = functools.partial(_encode_kernel, cfg=cfg,
+                               resolutions=resolutions, hashed=hashed)
+    return pl.pallas_call(
+        kernel,
+        grid=(b // block_b,),
+        in_specs=[
+            pl.BlockSpec((block_b, cfg.dim), lambda i: (i, 0)),
+            # whole table stack pinned in VMEM for every grid step
+            pl.BlockSpec(tables.shape, lambda i: (0, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((block_b, cfg.out_dim), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((b, cfg.out_dim), jnp.float32),
+        interpret=interpret,
+    )(points, tables)

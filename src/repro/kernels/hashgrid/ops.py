@@ -1,0 +1,24 @@
+"""Jitted public wrapper for the hashgrid encoding kernel."""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.encoding import GridConfig
+from repro.kernels.common import default_interpret, pad_batch
+from repro.kernels.hashgrid.hashgrid import hashgrid_encode_pallas
+
+
+@functools.partial(jax.jit, static_argnames=("cfg", "block_b", "interpret"))
+def encode(points: jnp.ndarray, tables: jnp.ndarray, cfg: GridConfig,
+           *, block_b: int = 1024, interpret: bool | None = None
+           ) -> jnp.ndarray:
+    if interpret is None:
+        interpret = default_interpret()
+    block_b = min(block_b, max(8, points.shape[0]))
+    padded, n = pad_batch(points, block_b)
+    out = hashgrid_encode_pallas(padded, tables, cfg, block_b=block_b,
+                                 interpret=interpret)
+    return out[:n]

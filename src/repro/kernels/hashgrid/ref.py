@@ -1,0 +1,6 @@
+"""Pure-jnp oracle for the hashgrid kernel: the core library itself."""
+from repro.core.encoding import grid_encode
+
+
+def encode_ref(points, tables, cfg):
+    return grid_encode(points, tables, cfg)

@@ -1,0 +1,2 @@
+from repro.kernels.ray_march import ops, ref
+from repro.kernels.ray_march.ray_march import composite_pallas

@@ -1,0 +1,27 @@
+"""Jitted public wrapper for the compositing kernel."""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.common import default_interpret
+from repro.kernels.ray_march.ray_march import composite_pallas
+
+
+@functools.partial(jax.jit, static_argnames=("block_r", "interpret"))
+def composite(rgb, sigma, dts, *, block_r: int = 256,
+              interpret: bool | None = None):
+    if interpret is None:
+        interpret = default_interpret()
+    r = sigma.shape[0]
+    block_r = min(block_r, max(8, r))
+    pad = (-r) % block_r
+    if pad:
+        rgb = jnp.pad(rgb, ((0, pad), (0, 0), (0, 0)))
+        sigma = jnp.pad(sigma, ((0, pad), (0, 0)))
+        dts = jnp.pad(dts, ((0, pad), (0, 0)))
+    pix, opac = composite_pallas(rgb, sigma, dts, block_r=block_r,
+                                 interpret=interpret)
+    return pix[:r], opac[:r]

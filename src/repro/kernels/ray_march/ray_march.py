@@ -1,0 +1,61 @@
+"""Pallas TPU kernel: fused volume compositing (post-processing fusion).
+
+The paper fuses the pre/post-processing kernels in Vulkan for a ~9.94x
+kernel win. On TPU the compositing (alpha blending along each ray) is the
+post-processing hot spot; this kernel computes it per ray-block with
+transmittance realized as exp(cumsum(log)) — cumsum is the TPU-native
+parallel primitive (cumprod is not).
+
+Grid: 1-D over ray blocks. rgb (R, S, 3), sigma (R, S), dts (R, S)
+-> pixel (R, 3), opacity (R,). Everything for a block fits VMEM:
+block_r=256, S<=192 -> 256*192*5*4B = 0.98 MB.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _composite_kernel(rgb_ref, sigma_ref, dts_ref, pix_ref, opac_ref):
+    sigma = sigma_ref[...].astype(jnp.float32)           # (blk, S)
+    dts = dts_ref[...].astype(jnp.float32)
+    rgb = rgb_ref[...].astype(jnp.float32)               # (blk, S, 3)
+    alpha = 1.0 - jnp.exp(-sigma * dts)
+    # T_i = prod_{j<i} (1-alpha_j) = exp(cumsum(log(1-alpha))). Since
+    # 1-alpha == exp(-sigma*dt) EXACTLY, log(1-alpha) = -sigma*dt — no
+    # log() call, and opaque samples (alpha -> 1) stay finite.
+    log1m = -sigma * dts
+    csum = jnp.cumsum(log1m, axis=-1)
+    trans = jnp.exp(csum - log1m)                        # exclusive scan
+    w = trans * alpha                                    # (blk, S)
+    pix_ref[...] = jnp.sum(w[..., None] * rgb, axis=-2).astype(pix_ref.dtype)
+    opac_ref[...] = jnp.sum(w, axis=-1, keepdims=True).astype(opac_ref.dtype)
+
+
+def composite_pallas(rgb: jnp.ndarray, sigma: jnp.ndarray, dts: jnp.ndarray,
+                     *, block_r: int = 256, interpret: bool = True):
+    """(R, S, 3), (R, S), (R, S) -> ((R, 3), (R,)). R % block_r == 0."""
+    r, s = sigma.shape
+    assert r % block_r == 0, (r, block_r)
+    pix, opac = pl.pallas_call(
+        _composite_kernel,
+        grid=(r // block_r,),
+        in_specs=[
+            pl.BlockSpec((block_r, s, 3), lambda i: (i, 0, 0)),
+            pl.BlockSpec((block_r, s), lambda i: (i, 0)),
+            pl.BlockSpec((block_r, s), lambda i: (i, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((block_r, 3), lambda i: (i, 0)),
+            pl.BlockSpec((block_r, 1), lambda i: (i, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((r, 3), jnp.float32),
+            jax.ShapeDtypeStruct((r, 1), jnp.float32),
+        ],
+        interpret=interpret,
+    )(rgb, sigma, dts)
+    return pix, opac[:, 0]

@@ -1,0 +1,2 @@
+"""Pure-jnp oracle: the core renderer's composite."""
+from repro.core.render import composite as composite_ref  # noqa: F401

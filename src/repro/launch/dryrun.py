@@ -1,0 +1,337 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+"""Multi-pod dry-run: lower + compile every (arch x shape x mesh) cell.
+
+The two lines above MUST stay the first statements: jax locks the device
+count at first init, and the production meshes need 512 host devices.
+
+Usage:
+  PYTHONPATH=src python -m repro.launch.dryrun --arch yi-6b --shape train_4k
+  PYTHONPATH=src python -m repro.launch.dryrun --all [--mesh single|multi|both]
+  PYTHONPATH=src python -m repro.launch.dryrun --fields   # paper's apps
+
+Each cell produces: the full-depth compiled step (memory_analysis proves
+fit; this is the deliverable), plus two small UNROLLED 'probe' compiles.
+Probes exist because XLA's HloCostAnalysis counts a while-loop body once
+regardless of trip count — FLOPs/bytes/collective-bytes of the scanned
+full model are linearly extrapolated from probes at depth P and 2P
+(P = layer period). Heavy SSD einsums are batched outside the chunk scan,
+so no chunk unrolling is needed.
+
+Outputs one JSON record per cell into --out, incrementally (resumable).
+"""
+import argparse
+import dataclasses
+import json
+import sys
+import time
+import traceback
+from pathlib import Path
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import registry
+from repro.configs.shapes import SHAPES, shape_applicable
+from repro.launch import roofline
+from repro.launch.mesh import make_production_mesh, mesh_chip_count
+from repro.parallel import api
+from repro.common.partitioning import LogicalRules, rule_preset
+
+DEFAULT_OUT = Path(__file__).resolve().parents[3] / "benchmarks" / \
+    "results" / "dryrun.json"
+
+
+def _load(out: Path) -> dict:
+    return json.loads(out.read_text()) if out.exists() else {}
+
+
+def _save(out: Path, results: dict):
+    out.parent.mkdir(parents=True, exist_ok=True)
+    out.write_text(json.dumps(results, indent=1, default=str))
+
+
+def build_and_compile(cfg, shape: str, mesh, rules: LogicalRules,
+                      train_overrides: dict = None):
+    """Lower+compile one step for one cell; returns (compiled, meta)."""
+    cell = SHAPES[shape]
+    specs = registry.input_specs(cfg, shape)
+    with mesh:
+        if cell.step == "train":
+            from repro.train import optim
+            tc = api.TrainConfig(**(train_overrides or {}))
+            step, sh = api.make_train_step(cfg, mesh, rules,
+                                           train_cfg=tc,
+                                           example_batch=specs)
+            pshapes, _ = api.param_specs(cfg, mesh, rules)
+            state_sds = {"params": pshapes,
+                         "opt": jax.eval_shape(optim.adam_init, pshapes)}
+            lowered = step.lower(state_sds, specs["batch"])
+        elif cell.step == "prefill":
+            step, sh = api.make_prefill_step(
+                cfg, mesh, rules, example_batch=specs,
+                capacity=cell.seq_len, batch_size=cell.global_batch,
+                enc_len=cell.seq_len if cfg.is_encdec else 0)
+            pshapes, _ = api.param_specs(cfg, mesh, rules)
+            lowered = step.lower(pshapes, specs["batch"],
+                                 sh["cache_shapes"])
+        else:  # decode
+            step, sh = api.make_decode_step(
+                cfg, mesh, rules, capacity=cell.seq_len,
+                batch_size=cell.global_batch,
+                enc_len=min(cell.seq_len, 32768) if cfg.is_encdec else 0)
+            pshapes, _ = api.param_specs(cfg, mesh, rules)
+            lowered = step.lower(pshapes, sh["cache_shapes"],
+                                 specs["tokens"], specs["pos"])
+        compiled = lowered.compile()
+    return compiled
+
+
+def _probe_quantities(compiled):
+    cost = compiled.cost_analysis() or {}
+    coll = roofline.collective_bytes(compiled.as_text())
+    return {"flops": float(cost.get("flops", 0.0)),
+            "bytes": float(cost.get("bytes accessed", 0.0)),
+            "coll": float(coll["total"])}
+
+
+def probe_extrapolate(cfg, shape: str, mesh, rules_name: str,
+                      train_overrides=None):
+    # (cfg arrives with any per-experiment overrides already applied)
+    """FLOPs/bytes/collectives at full depth via two unrolled probes."""
+    from repro.models import blocks
+    # probes must not wrap compute in the microbatch scan (counted once);
+    # total FLOPs/collectives are microbatch-count invariant
+    if train_overrides:
+        train_overrides = {**train_overrides, "num_microbatches": 1}
+    period = 1 if cfg.is_encdec else blocks.block_period(cfg)
+    n_per = cfg.n_layers // period
+    if n_per == 1:   # already depth-1: a single unrolled compile is exact
+        c1 = build_and_compile(
+            dataclasses.replace(cfg, scan_layers=False), shape, mesh,
+            rule_preset(rules_name), train_overrides)
+        return _probe_quantities(c1), {"probe": "exact"}
+    cfg1 = dataclasses.replace(cfg, n_layers=period, scan_layers=False)
+    cfg2 = dataclasses.replace(cfg, n_layers=2 * period, scan_layers=False)
+    q1 = _probe_quantities(build_and_compile(
+        cfg1, shape, mesh, rule_preset(rules_name), train_overrides))
+    q2 = _probe_quantities(build_and_compile(
+        cfg2, shape, mesh, rule_preset(rules_name), train_overrides))
+    full = {k: q1[k] + (n_per - 1) * (q2[k] - q1[k]) for k in q1}
+    return full, {"probe_p": q1, "probe_2p": q2, "n_periods": n_per}
+
+
+# per-cell step config needed to FIT v5e HBM at full depth (production
+# would configure the same; probes force num_microbatches back to 1)
+TRAIN_OVERRIDES = {
+    ("qwen2-vl-72b", "train_4k"): {"num_microbatches": 8},
+    ("qwen3-32b", "train_4k"): {"num_microbatches": 2},
+    ("jamba-v0.1-52b", "train_4k"): {"num_microbatches": 16},
+    ("qwen3-moe-30b-a3b", "train_4k"): {"num_microbatches": 2},
+    ("olmoe-1b-7b", "train_4k"): {"num_microbatches": 2},
+    ("whisper-base", "train_4k"): {"num_microbatches": 2},
+}
+
+
+def lower_cell(arch: str, shape: str, multi_pod: bool,
+               rules_name: str = "baseline", verbose: bool = True,
+               train_overrides=None, probes: bool = True,
+               moe_cf: float = None, cfg_overrides: dict = None):
+    cfg = registry.get_config(arch)
+    if moe_cf is not None and cfg.moe is not None:
+        cfg = dataclasses.replace(
+            cfg, moe=dataclasses.replace(cfg.moe, capacity_factor=moe_cf))
+    if cfg_overrides:
+        cfg = dataclasses.replace(cfg, **cfg_overrides)
+    if train_overrides is None:
+        train_overrides = TRAIN_OVERRIDES.get((arch, shape))
+    skip = shape_applicable(cfg, shape)
+    if skip:
+        return {"cell": f"{arch}/{shape}", "skipped": skip}
+
+    cell = SHAPES[shape]
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    chips = mesh_chip_count(mesh)
+    rules = rule_preset(rules_name)
+
+    t0 = time.time()
+    compiled = build_and_compile(cfg, shape, mesh, rules, train_overrides)
+    t_compile = time.time() - t0
+
+    mem = compiled.memory_analysis()
+    hlo = compiled.as_text()
+    cost = compiled.cost_analysis()
+
+    if probes:
+        t1 = time.time()
+        full, probe_meta = probe_extrapolate(cfg, shape, mesh, rules_name,
+                                             train_overrides)
+        t_probe = time.time() - t1
+    else:
+        q = {"flops": float((cost or {}).get("flops", 0.0)),
+             "bytes": float((cost or {}).get("bytes accessed", 0.0)),
+             "coll": float(roofline.collective_bytes(hlo)["total"])}
+        full, probe_meta, t_probe = q, {"probe": "disabled"}, 0.0
+
+    n_active = cfg.active_param_count()
+    mf = roofline.model_flops(cfg, cell, n_active)
+    name = f"{arch}/{shape}/{'multi' if multi_pod else 'single'}"
+    rec = roofline.summarize(
+        name,
+        {"flops": full["flops"], "bytes accessed": full["bytes"]},
+        mem, hlo, chips, mf)
+    # overwrite collective bytes with the extrapolated value
+    rec["collective_bytes_per_device"] = full["coll"]
+    rec["collective_s"] = full["coll"] / roofline.TPU_V5E["ici_link_bw"]
+    terms = {k: rec[k] for k in ("compute_s", "memory_s", "collective_s")}
+    rec["dominant"] = max(terms, key=terms.get)
+    rec["bound_s"] = max(terms.values())
+    rec["useful_flops_ratio"] = (
+        mf / (full["flops"] * chips) if full["flops"] else float("nan"))
+    rec.update({
+        "rules": rules_name,
+        "train_overrides": train_overrides,
+        "compile_s": round(t_compile, 1), "probe_s": round(t_probe, 1),
+        "params_total": cfg.param_count(),
+        "params_active": n_active,
+        "probe_meta": probe_meta,
+        "scan_cost_raw": {k: float((cost or {}).get(k, 0.0))
+                          for k in ("flops", "bytes accessed")},
+        "sharding_fallbacks": sorted(set(
+            f"{p}[{d}]:{ax}" for (p, d, ax, _, _) in rules.fallbacks))[:40],
+    })
+    if verbose:
+        ma = rec.get("memory_analysis", {})
+        print(f"[dryrun] {name}: compile={t_compile:.0f}s "
+              f"probes={t_probe:.0f}s dominant={rec['dominant']} "
+              f"bound={rec['bound_s'] * 1e3:.2f}ms "
+              f"flops/dev={rec['flops_per_device']:.3g} "
+              f"coll/dev={rec['collective_bytes_per_device']:.3g}B")
+        print(f"[dryrun] memory_analysis: args={ma.get('argument_bytes')} "
+              f"temp={ma.get('temp_bytes')} "
+              f"fits_16G={ma.get('fits_v5e_16g')}")
+        print(f"[dryrun] cost_analysis(extrapolated): "
+              f"flops={full['flops']:.4g} bytes={full['bytes']:.4g}")
+    return rec
+
+
+def field_cell(app: str, encoding: str, multi_pod: bool,
+               verbose: bool = True, fused: bool = True,
+               n_samples: int = 32):
+    """Dry-run the paper's own apps: a batched render step (2^21 pixel
+    requests — half a 4k frame) sharded over every chip."""
+    from repro.core import fields, pipeline
+    from repro.common.param import unbox
+    from repro.common.partitioning import logical_to_spec, \
+        specs_to_shardings
+    from jax.sharding import NamedSharding, PartitionSpec as P
+
+    fcfg = registry.field_config(app, encoding)
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    chips = mesh_chip_count(mesh)
+    rules = rule_preset("baseline")
+
+    boxed = jax.eval_shape(
+        lambda k: fields.init_field(k, fcfg), jax.random.PRNGKey(0))
+    pshapes, paxes = unbox(boxed)
+    # serving: tables replicated per chip (the grid_sram residency model)
+    serve_rules = rules.copy_with(table=None)
+    pspecs = logical_to_spec(paxes, mesh, serve_rules, pshapes)
+    pshard = specs_to_shardings(pspecs, mesh)
+
+    n_pix = 1 << 21
+    settings = pipeline.RenderSettings(fused=fused, n_samples=n_samples)
+    render = pipeline.make_render_step(fcfg, settings)
+    pix_axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    pix_shard = NamedSharding(mesh, P(pix_axes))
+    t0 = time.time()
+    with mesh:
+        step = jax.jit(render, in_shardings=(pshard, pix_shard),
+                       out_shardings=pix_shard)
+        lowered = step.lower(
+            pshapes, jax.ShapeDtypeStruct((n_pix,), jnp.int32))
+        compiled = lowered.compile()
+    t = time.time() - t0
+    cost = compiled.cost_analysis()
+    mem = compiled.memory_analysis()
+    hlo = compiled.as_text()
+    from repro.core.fields import field_param_count
+    name = (f"field-{app}-{encoding}"
+            f"{'' if fused else '-unfused'}/"
+            f"{'multi' if multi_pod else 'single'}")
+    rec = roofline.summarize(name, cost, mem, hlo, chips,
+                             model_fl=float("nan"))
+    rec.update({"compile_s": round(t, 1), "fused": fused,
+                "params_total": field_param_count(fcfg),
+                "n_pixels": n_pix})
+    if verbose:
+        ma = rec.get("memory_analysis", {})
+        print(f"[dryrun] {name}: compile={t:.0f}s "
+              f"dominant={rec['dominant']} "
+              f"bound={rec['bound_s'] * 1e3:.2f}ms "
+              f"temp={ma.get('temp_bytes')}")
+    return rec
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--mesh", default="single",
+                    choices=["single", "multi", "both"])
+    ap.add_argument("--rules", default="baseline")
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--fields", action="store_true")
+    ap.add_argument("--no-probes", action="store_true")
+    ap.add_argument("--moe-cf", type=float, default=None)
+    ap.add_argument("--out", default=str(DEFAULT_OUT))
+    ap.add_argument("--force", action="store_true")
+    args = ap.parse_args(argv)
+
+    out = Path(args.out)
+    results = _load(out)
+    meshes = {"single": [False], "multi": [True],
+              "both": [False, True]}[args.mesh]
+
+    cells = []
+    if args.fields:
+        for app in registry.FIELD_APPS:
+            for encoding in registry.FIELD_ENCODINGS:
+                cells.append(("field", app, encoding))
+    elif args.all:
+        for arch in registry.list_archs():
+            for shape in SHAPES:
+                cells.append(("lm", arch, shape))
+    else:
+        cells.append(("lm", args.arch, args.shape))
+
+    failures = 0
+    for kind, a, b in cells:
+        for multi in meshes:
+            key = (f"{a}/{b}/{'multi' if multi else 'single'}"
+                   if kind == "lm" else
+                   f"field-{a}-{b}/{'multi' if multi else 'single'}")
+            if args.rules != "baseline":
+                key += f"@{args.rules}"
+            if key in results and not args.force \
+                    and "error" not in results[key]:
+                print(f"[dryrun] {key}: cached, skip", flush=True)
+                continue
+            try:
+                rec = (lower_cell(a, b, multi, args.rules,
+                                  probes=not args.no_probes,
+                                  moe_cf=args.moe_cf)
+                       if kind == "lm" else field_cell(a, b, multi))
+            except Exception as e:  # noqa: BLE001 - record and continue
+                traceback.print_exc()
+                rec = {"cell": key, "error": f"{type(e).__name__}: {e}"}
+                failures += 1
+            results[key] = rec
+            _save(out, results)
+    print(f"[dryrun] done: {len(cells) * len(meshes)} cells, "
+          f"{failures} failures -> {out}")
+    return 1 if failures else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,29 @@
+"""Production mesh definitions.
+
+Functions, not module-level constants — importing this module never
+touches jax device state (jax locks the device count on first use)."""
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    """Single pod: 16x16 = 256 chips (data, model).
+    Multi-pod: 2 pods x 256 = 512 chips (pod, data, model); the 'pod'
+    axis carries only the cross-pod DP gradient all-reduce (DCN)."""
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_local_mesh(data: int = 1, model: int = 1):
+    """Mesh over whatever devices exist (tests / local runs)."""
+    n = len(jax.devices())
+    if data * model > n:
+        data, model = n, 1
+    return jax.make_mesh((data, model), ("data", "model"))
+
+
+def mesh_chip_count(mesh) -> int:
+    import math
+    return math.prod(mesh.shape.values())

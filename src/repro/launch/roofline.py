@@ -1,0 +1,160 @@
+"""Roofline-term extraction from compiled dry-run artifacts.
+
+compute   = HLO_FLOPs_per_device / PEAK_FLOPS        (197 TF/s bf16, v5e)
+memory    = HLO_bytes_per_device / HBM_BW            (819 GB/s)
+collective= collective_bytes_per_device / LINK_BW    (~50 GB/s/link ICI)
+
+``compiled.cost_analysis()`` / ``compiled.as_text()`` describe the
+post-SPMD *per-device* module, so per-device quantities over per-chip
+rates equal the global quantities over (chips x rate) form in the spec.
+
+Collective bytes are NOT in cost_analysis: we parse the optimized HLO and
+sum *operand* sizes of every all-gather / all-reduce / reduce-scatter /
+all-to-all / collective-permute instruction (async -start forms counted
+once; -done forms skipped)."""
+from __future__ import annotations
+
+import math
+import re
+from typing import Dict, Optional, Tuple
+
+# ------------------------------------------------------------- HW constants
+TPU_V5E = {
+    "name": "tpu_v5e",
+    "peak_flops_bf16": 197e12,     # per chip
+    "hbm_bw": 819e9,               # bytes/s per chip
+    "ici_link_bw": 50e9,           # bytes/s per link (approx, one direction)
+    "hbm_bytes": 16 * 1024 ** 3,   # 16 GB
+    "dcn_bw": 25e9 / 8,            # cross-pod; used for 'pod' axis notes
+}
+
+_DTYPE_BYTES = {
+    "pred": 1, "s4": 1, "u4": 1, "s8": 1, "u8": 1,
+    "f8e5m2": 1, "f8e4m3fn": 1, "f8e4m3": 1, "f8e4m3b11fnuz": 1,
+    "s16": 2, "u16": 2, "f16": 2, "bf16": 2,
+    "s32": 4, "u32": 4, "f32": 4,
+    "s64": 8, "u64": 8, "f64": 8, "c64": 8, "c128": 16,
+    "token": 0, "opaque": 0,
+}
+
+COLLECTIVE_OPS = (
+    "all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+    "collective-permute",
+)
+
+_SHAPE_RE = re.compile(r"\b([a-z0-9]+)\[([0-9,]*)\]")
+# instruction definition: '%name = <type> <opcode>(%a, %b, ...)'
+_DEF_RE = re.compile(
+    r"^\s*(?:ROOT\s+)?(%[\w\.\-]+)\s*=\s*"
+    r"((?:\([^)]*\))|(?:[a-z0-9]+\[[0-9,]*\](?:\{[^}]*\})?))\s+"
+    r"([\w\-]+)\(([^)]*)\)")
+_OPERAND_RE = re.compile(r"%[\w\.\-]+")
+_COMPUTATION_RE = re.compile(r"^(?:ENTRY\s+)?%?[\w\.\-]+\s*\(.*\)\s*->")
+
+
+def _shape_bytes(dtype: str, dims: str) -> int:
+    if dtype not in _DTYPE_BYTES:
+        return 0
+    n = 1
+    if dims:
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+    return n * _DTYPE_BYTES[dtype]
+
+
+def _type_bytes(type_str: str) -> int:
+    """Bytes of 'f32[8,128]{1,0}' or tuple '(f32[2], bf16[4,4])'."""
+    return sum(_shape_bytes(dt, dims)
+               for dt, dims in _SHAPE_RE.findall(type_str))
+
+
+def collective_bytes(hlo_text: str) -> Dict[str, int]:
+    """Sum *operand* bytes per collective kind from optimized HLO text.
+
+    Optimized HLO references operands by name only, so we build a
+    name -> bytes map (scoped per computation — %param names repeat
+    across computations) and resolve each collective's operand list.
+    Async '-start' instructions are counted; '-done' skipped.
+    """
+    totals: Dict[str, int] = {k: 0 for k in COLLECTIVE_OPS}
+    counts: Dict[str, int] = {k: 0 for k in COLLECTIVE_OPS}
+    sizes: Dict[str, int] = {}
+    pending = []   # (base_op, operand_names) within the current scope
+
+    def flush():
+        for base, names in pending:
+            totals[base] += sum(sizes.get(n, 0) for n in names)
+            counts[base] += 1
+        pending.clear()
+
+    for line in hlo_text.splitlines():
+        if _COMPUTATION_RE.match(line) and "{" in line:
+            flush()
+            sizes.clear()        # new computation scope
+        m = _DEF_RE.match(line)
+        if not m:
+            continue
+        name, type_str, opcode, args = m.groups()
+        sizes[name] = _type_bytes(type_str)
+        if opcode.endswith("-done"):
+            continue
+        base = opcode.replace("-start", "")
+        if base in COLLECTIVE_OPS:
+            pending.append((base, _OPERAND_RE.findall(args)))
+    flush()
+    totals["total"] = sum(totals[k] for k in COLLECTIVE_OPS)
+    totals.update({f"n_{k}": v for k, v in counts.items() if v})
+    return totals
+
+
+def rooflines(cost: Optional[dict], coll_bytes: int, chips: int,
+              hw: dict = TPU_V5E) -> Dict[str, float]:
+    flops = float(cost.get("flops", 0.0)) if cost else 0.0
+    bytes_hbm = float(cost.get("bytes accessed", 0.0)) if cost else 0.0
+    t_compute = flops / hw["peak_flops_bf16"]
+    t_memory = bytes_hbm / hw["hbm_bw"]
+    t_coll = coll_bytes / hw["ici_link_bw"]
+    terms = {"compute_s": t_compute, "memory_s": t_memory,
+             "collective_s": t_coll}
+    dom = max(terms, key=terms.get)
+    return {**terms, "dominant": dom,
+            "bound_s": max(t_compute, t_memory, t_coll),
+            "flops_per_device": flops, "hbm_bytes_per_device": bytes_hbm,
+            "collective_bytes_per_device": float(coll_bytes),
+            "chips": chips}
+
+
+def model_flops(cfg, shape_cell, n_params_active: int) -> float:
+    """MODEL_FLOPS: 6*N*D train; 2*N*B decode (per step); 2*N*D prefill."""
+    tokens = shape_cell.global_batch * shape_cell.seq_len
+    if shape_cell.step == "train":
+        return 6.0 * n_params_active * tokens
+    if shape_cell.step == "prefill":
+        return 2.0 * n_params_active * tokens
+    return 2.0 * n_params_active * shape_cell.global_batch  # decode: 1 tok
+
+
+def summarize(cell_name: str, cost, mem, hlo_text: str, chips: int,
+              model_fl: float) -> Dict:
+    coll = collective_bytes(hlo_text)
+    rl = rooflines(cost, coll["total"], chips)
+    rl["model_flops_global"] = model_fl
+    dev_fl = rl["flops_per_device"]
+    rl["useful_flops_ratio"] = (
+        model_fl / (dev_fl * chips) if dev_fl else float("nan"))
+    rl["collectives"] = {k: v for k, v in coll.items() if v}
+    if mem is not None:
+        rl["memory_analysis"] = {
+            "argument_bytes": getattr(mem, "argument_size_in_bytes", None),
+            "output_bytes": getattr(mem, "output_size_in_bytes", None),
+            "temp_bytes": getattr(mem, "temp_size_in_bytes", None),
+            "peak_bytes": (getattr(mem, "temp_size_in_bytes", 0) or 0)
+            + (getattr(mem, "argument_size_in_bytes", 0) or 0),
+        }
+        hbm = TPU_V5E["hbm_bytes"]
+        arg = rl["memory_analysis"]["argument_bytes"] or 0
+        tmp = rl["memory_analysis"]["temp_bytes"] or 0
+        rl["memory_analysis"]["fits_v5e_16g"] = bool(arg + tmp < hbm)
+    rl["cell"] = cell_name
+    return rl

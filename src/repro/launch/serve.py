@@ -1,0 +1,144 @@
+"""Serving launcher — two modes, matching the paper's kind:
+
+  * ``--mode render``: the NGPC use case — batched pixel-request serving
+    against a trained neural field (tiles scheduled like Fig. 10).
+  * ``--mode lm``: LM decode loop (prefill + token-by-token decode) for
+    the assigned architectures.
+
+  PYTHONPATH=src python -m repro.launch.serve --mode render --app gia
+  PYTHONPATH=src python -m repro.launch.serve --mode lm --arch olmoe-1b-7b --reduced
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import registry
+from repro.launch.mesh import make_local_mesh
+
+
+def serve_render(app: str = "gia", encoding: str = "hash",
+                 train_steps: int = 150, n_requests: int = 8,
+                 tile_pixels: int = 4096, height: int = 128,
+                 width: int = 128, use_pallas: bool = False, seed: int = 0):
+    """Train a small field, then serve batched pixel requests."""
+    import dataclasses
+    from repro.core import fields, pipeline, render
+    from repro.core.train import train_field
+
+    cfg = registry.field_config(app, encoding)
+    # laptop-scale table for the local server
+    g = dataclasses.replace(cfg.grid, log2_table_size=14)
+    cfg = dataclasses.replace(cfg, grid=g)
+    if cfg.app != "nerf":
+        cfg = dataclasses.replace(
+            cfg, mlp=dataclasses.replace(cfg.mlp, in_dim=g.out_dim))
+    print(f"[serve] training {cfg.name} for {train_steps} steps...")
+    params, hist = train_field(cfg, steps=train_steps, batch_size=4096,
+                               seed=seed)
+    print(f"[serve] trained: loss {hist[0][1]:.4f} -> {hist[-1][1]:.4f}")
+
+    cam = render.Camera(height=height, width=width, focal=0.9 * width,
+                        c2w=render.look_at((2.2, 1.6, 1.8), (0, 0, 0)))
+    settings = pipeline.RenderSettings(tile_pixels=tile_pixels,
+                                       use_pallas=use_pallas)
+    tile_fn = jax.jit(pipeline.make_tile_fn(cfg, settings, cam))
+
+    # batched request loop: each request is a tile of pixel ids
+    rng = np.random.default_rng(seed)
+    lat = []
+    for r in range(n_requests):
+        ids = jnp.asarray(rng.integers(0, height * width, tile_pixels),
+                          dtype=jnp.int32)
+        t0 = time.perf_counter()
+        out = tile_fn(params, ids)
+        out.block_until_ready()
+        lat.append(time.perf_counter() - t0)
+        print(f"[serve] request {r}: {tile_pixels} px in "
+              f"{lat[-1] * 1e3:.1f}ms "
+              f"({tile_pixels / lat[-1] / 1e6:.2f} Mpix/s)")
+    med = sorted(lat)[len(lat) // 2]
+    print(f"[serve] median tile latency {med * 1e3:.1f}ms; "
+          f"4k frame budget needs "
+          f"{3840 * 2160 / tile_pixels * med * 1e3:.0f}ms/frame")
+    return med
+
+
+def serve_lm(arch: str, reduced: bool = True, batch: int = 2,
+             prompt_len: int = 32, gen_len: int = 16, seed: int = 0):
+    from repro.common.partitioning import DEFAULT_RULES
+    from repro.parallel import api
+
+    cfg = (registry.reduced_config(arch) if reduced
+           else registry.get_config(arch))
+    mesh = make_local_mesh()
+    rules = DEFAULT_RULES.copy_with()
+    capacity = prompt_len + gen_len
+
+    prefill_fn, psh = api.make_prefill_step(
+        cfg, mesh, rules, capacity=capacity, batch_size=batch,
+        enc_len=prompt_len if cfg.is_encdec else 0,
+        example_batch=None)
+    decode_fn, dsh = api.make_decode_step(
+        cfg, mesh, rules, capacity=capacity, batch_size=batch,
+        enc_len=prompt_len if cfg.is_encdec else 0)
+
+    params = api.init_params(cfg, seed=seed, mesh=mesh, rules=rules)
+    cache = api.make_cache(cfg, batch, capacity,
+                           enc_len=prompt_len if cfg.is_encdec else 0,
+                           shardings=dsh["cache"])
+    rng = np.random.default_rng(seed)
+    toks = jnp.asarray(rng.integers(0, cfg.vocab_size,
+                                    (batch, prompt_len)), jnp.int32)
+    batch_in = {"tokens": toks}
+    if cfg.is_encdec:
+        batch_in["enc_embeddings"] = jnp.asarray(
+            rng.standard_normal((batch, prompt_len, cfg.d_model)),
+            cfg.adtype)
+    if cfg.frontend == "vision":
+        batch_in = {"embeddings": jnp.asarray(
+            rng.standard_normal((batch, prompt_len, cfg.d_model)),
+            cfg.adtype)}
+
+    t0 = time.perf_counter()
+    logits, cache = prefill_fn(params, batch_in, cache)
+    logits.block_until_ready()
+    t_prefill = time.perf_counter() - t0
+    out_tokens = []
+    tok = jnp.argmax(logits, -1).astype(jnp.int32)[:, None]
+    t0 = time.perf_counter()
+    for i in range(gen_len):
+        out_tokens.append(np.asarray(tok)[:, 0])
+        logits, cache = decode_fn(params, cache, tok,
+                                  jnp.int32(prompt_len + i))
+        tok = jnp.argmax(logits, -1).astype(jnp.int32)[:, None]
+    jax.block_until_ready(logits)
+    t_decode = time.perf_counter() - t0
+    print(f"[serve] {arch}: prefill({prompt_len} tok) {t_prefill*1e3:.0f}ms"
+          f"; {gen_len} decode steps {t_decode*1e3:.0f}ms "
+          f"({gen_len * batch / t_decode:.1f} tok/s)")
+    print(f"[serve] sample: {np.stack(out_tokens, 1)[0][:12]}")
+    return t_prefill, t_decode
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--mode", default="render", choices=["render", "lm"])
+    ap.add_argument("--app", default="gia")
+    ap.add_argument("--encoding", default="hash")
+    ap.add_argument("--arch", default="olmoe-1b-7b")
+    ap.add_argument("--reduced", action="store_true", default=True)
+    ap.add_argument("--use-pallas", action="store_true")
+    args = ap.parse_args(argv)
+    if args.mode == "render":
+        serve_render(args.app, args.encoding, use_pallas=args.use_pallas)
+    else:
+        serve_lm(args.arch, args.reduced)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,250 @@
+"""Grouped-query attention with the pool's full option set:
+qk-norm (qwen3), QKV bias (qwen2), sliding-window (h2o-danube),
+M-RoPE (qwen2-vl), cross-attention (whisper), full + ring KV caches.
+
+Weights keep their logical 3-D head layout so TP sharding specs read off
+the axes: wq (embed, heads, head_dim), wk/wv (embed, kv_heads, head_dim),
+wo (heads, head_dim, embed). GQA is computed grouped (no KV repeat)."""
+from __future__ import annotations
+
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.common.param import Boxed, KeyGen, scaled_init
+from repro.models import layers
+from repro.models.config import ModelConfig
+
+NEG_INF = -1e30
+
+
+def init_attention(key, cfg: ModelConfig, cross: bool = False) -> Dict:
+    kg = KeyGen(key)
+    d, h, kv, hd = cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.head_dim_
+    dt = cfg.pdtype
+    p = {
+        "wq": Boxed(scaled_init(kg(), (d, h, hd), dtype=dt),
+                    ("embed", "heads", "head_dim")),
+        "wk": Boxed(scaled_init(kg(), (d, kv, hd), dtype=dt),
+                    ("embed", "kv_heads", "head_dim")),
+        "wv": Boxed(scaled_init(kg(), (d, kv, hd), dtype=dt),
+                    ("embed", "kv_heads", "head_dim")),
+        "wo": Boxed(scaled_init(kg(), (h, hd, d), dtype=dt, fan_in=h * hd),
+                    ("heads", "head_dim", "embed")),
+    }
+    if cfg.qkv_bias and not cross:
+        p["bq"] = Boxed(jnp.zeros((h, hd), dt), ("heads", "head_dim"))
+        p["bk"] = Boxed(jnp.zeros((kv, hd), dt), ("kv_heads", "head_dim"))
+        p["bv"] = Boxed(jnp.zeros((kv, hd), dt), ("kv_heads", "head_dim"))
+    if cfg.qk_norm and not cross:
+        p["q_norm"] = Boxed(jnp.ones((hd,), dt), ("head_dim",))
+        p["k_norm"] = Boxed(jnp.ones((hd,), dt), ("head_dim",))
+    return p
+
+
+def _project_qkv(params, cfg: ModelConfig, x, kv_x, positions,
+                 rope: bool = True):
+    dt = x.dtype
+    q = jnp.einsum("bsd,dhe->bshe", x, params["wq"].astype(dt))
+    k = jnp.einsum("bsd,dke->bske", kv_x, params["wk"].astype(dt))
+    v = jnp.einsum("bsd,dke->bske", kv_x, params["wv"].astype(dt))
+    if "bq" in params:
+        q = q + params["bq"].astype(dt)
+        k = k + params["bk"].astype(dt)
+        v = v + params["bv"].astype(dt)
+    if "q_norm" in params:
+        q = layers.head_rmsnorm(params["q_norm"], q, cfg.norm_eps)
+        k = layers.head_rmsnorm(params["k_norm"], k, cfg.norm_eps)
+    if rope and cfg.use_rope:
+        if cfg.m_rope_sections is not None:
+            q = layers.apply_m_rope(q, positions, cfg.rope_theta,
+                                    cfg.m_rope_sections)
+            k = layers.apply_m_rope(k, positions, cfg.rope_theta,
+                                    cfg.m_rope_sections)
+        else:
+            q = layers.apply_rope(q, positions, cfg.rope_theta)
+            k = layers.apply_rope(k, positions, cfg.rope_theta)
+    return q, k, v
+
+
+def _grouped_attend(q, k, v, mask, cfg: ModelConfig, sharder=None):
+    """q (B,Sq,H,hd), k/v (B,Sk,KV,hd), mask (B,1|?,Sq,Sk) bool.
+
+    TP adaptation: with 16-way tensor parallelism, a (KV, G) head split
+    where both factors are < 16 cannot shard on the model axis (the score
+    tensor replicates). KV heads are therefore *repeated* up to
+    ``attn_kv_pad_to`` (numerically exact — duplicated KV groups attend
+    identically) so the KV dim itself carries the 16-way shard."""
+    b, sq, h, hd = q.shape
+    kv = k.shape[2]
+    target = cfg.attn_kv_pad_to
+    if (target and kv < target and h % target == 0
+            and target % kv == 0 and h > kv):
+        rep = target // kv
+        k = jnp.repeat(k, rep, axis=2)
+        v = jnp.repeat(v, rep, axis=2)
+        kv = target
+    g = h // kv
+    qg = q.reshape(b, sq, kv, g, hd)
+    if sharder is not None:
+        qg = sharder(qg, "batch", "act_seq", "kv_heads", None, None)
+    scores = jnp.einsum("bqkgd,bskd->bkgqs", qg, k,
+                        preferred_element_type=jnp.float32)
+    scores = scores / jnp.sqrt(jnp.float32(hd))
+    scores = jnp.where(mask[:, None, None, :, :] if mask.ndim == 3
+                       else mask, scores, NEG_INF)
+    probs = jax.nn.softmax(scores, axis=-1).astype(q.dtype)
+    out = jnp.einsum("bkgqs,bskd->bqkgd", probs, v)
+    return out.reshape(b, sq, h, hd)
+
+
+def causal_mask(sq: int, sk: int, window: Optional[int] = None,
+                causal: bool = True) -> jnp.ndarray:
+    """(1, sq, sk) bool; query i may see key j. For prefill sq == sk."""
+    qi = jnp.arange(sq)[:, None] + (sk - sq)
+    kj = jnp.arange(sk)[None, :]
+    m = jnp.ones((sq, sk), bool) if not causal else (kj <= qi)
+    if window is not None:
+        m = m & (kj > qi - window)
+    return m[None]
+
+
+def _attend_maybe_chunked(q, k, v, cfg: ModelConfig, causal: bool,
+                          sharder=None) -> jnp.ndarray:
+    """Full attention with q-block chunking when the score tensor would be
+    large: each block materializes only (B, H, qc, Sk) — the
+    flash-attention memory shape, scanned over query blocks (probes
+    unroll it via cfg.scan_layers, like every scan)."""
+    from repro.models.scan_util import scan_or_unroll
+    sq, sk = q.shape[1], k.shape[1]
+    window = cfg.swa_window if causal else None
+    qc = cfg.attn_q_chunk
+    if qc is None or sq < 2 * qc:
+        mask = causal_mask(sq, sk, window=window, causal=causal)
+        return _grouped_attend(q, k, v, mask, cfg, sharder=sharder)
+    qc = next(c for c in range(qc, 0, -1) if sq % c == 0)
+    nq = sq // qc
+    q_blocks = jnp.moveaxis(
+        q.reshape(q.shape[0], nq, qc, q.shape[2], q.shape[3]), 1, 0)
+    offsets = jnp.arange(nq, dtype=jnp.int32) * qc + (sk - sq)
+
+    # SWA: a query block [off, off+qc) only sees keys in
+    # (off-window, off+qc) — slice K/V to that static-size span instead
+    # of masking the full sk (kills ~sk/(window+qc) of the score
+    # compute+memory; §Perf hillclimb 'swa-window-slice')
+    kw = window + qc if window is not None else sk
+    slice_keys = window is not None and causal and sk > kw
+
+    @jax.checkpoint   # recompute per-block scores in bwd (flash-style);
+    def body(_, inp):  # scan-bwd would otherwise save every block's probs
+        qb, off = inp
+        qi = jnp.arange(qc)[:, None] + off
+        if slice_keys:
+            start = jnp.clip(off - window + 1, 0, sk - kw)
+            kb = jax.lax.dynamic_slice_in_dim(k, start, kw, axis=1)
+            vb = jax.lax.dynamic_slice_in_dim(v, start, kw, axis=1)
+            kj = jnp.arange(kw)[None, :] + start
+            m = (kj <= qi) & (kj > qi - window)
+            return 0, _grouped_attend(qb, kb, vb, m[None], cfg,
+                                      sharder=sharder)
+        kj = jnp.arange(sk)[None, :]
+        m = (kj <= qi) if causal else jnp.ones((qc, sk), bool)
+        if window is not None:
+            m = m & (kj > qi - window)
+        return 0, _grouped_attend(qb, k, v, m[None], cfg, sharder=sharder)
+
+    _, out = scan_or_unroll(body, 0, (q_blocks, offsets), cfg.scan_layers)
+    return jnp.moveaxis(out, 0, 1).reshape(q.shape)
+
+
+def attend_full(params, cfg: ModelConfig, x, positions, *,
+                causal: bool = True, kv_x=None, kv_positions=None,
+                rope: bool = True, sharder=None) -> jnp.ndarray:
+    """Training / prefill / cross attention over the full sequence."""
+    kv_x = x if kv_x is None else kv_x
+    q, k, v = _project_qkv(params, cfg, x, kv_x, positions, rope=rope)
+    if sharder is not None:
+        q = sharder(q, "batch", "act_seq", "act_heads", "head_dim")
+    out = _attend_maybe_chunked(q, k, v, cfg, causal, sharder=sharder)
+    dt = x.dtype
+    return jnp.einsum("bshe,hed->bsd", out, params["wo"].astype(dt))
+
+
+# ------------------------------------------------------------------ caches
+def init_kv_cache(cfg: ModelConfig, batch: int, capacity: int, ring: bool
+                  ) -> Dict:
+    """One layer's KV cache. ``ring=True`` -> SWA ring buffer of size
+    min(capacity, window) with explicit slot positions (sub-quadratic
+    memory for long_500k)."""
+    size = min(capacity, cfg.swa_window) if ring else capacity
+    kvh, hd = cfg.n_kv_heads, cfg.head_dim_
+    return {
+        "k": jnp.zeros((batch, size, kvh, hd), cfg.adtype),
+        "v": jnp.zeros((batch, size, kvh, hd), cfg.adtype),
+        "slot_pos": jnp.full((size,), -1, jnp.int32),
+    }
+
+
+def cache_logical_axes() -> Dict:
+    return {"k": ("batch", "act_seq", "kv_heads", "head_dim"),
+            "v": ("batch", "act_seq", "kv_heads", "head_dim"),
+            "slot_pos": ("act_seq",)}
+
+
+def prefill_into_cache(params, cfg: ModelConfig, x, positions, cache,
+                       sharder=None) -> Tuple[jnp.ndarray, Dict]:
+    """Full-sequence attention that also fills the cache (last W tokens
+    for ring caches)."""
+    q, k, v = _project_qkv(params, cfg, x, x, positions)
+    out = _attend_maybe_chunked(q, k, v, cfg, causal=True, sharder=sharder)
+    dt = x.dtype
+    y = jnp.einsum("bshe,hed->bsd", out, params["wo"].astype(dt))
+
+    size = cache["k"].shape[1]
+    s = k.shape[1]
+    # 1-D temporal position stream (lockstep batch; m-rope uses the t axis)
+    pos_seq = positions
+    while pos_seq.ndim > 1:
+        pos_seq = pos_seq[0]
+    if s >= size:           # keep the trailing window
+        k_w, v_w = k[:, -size:], v[:, -size:]
+        pos_w = pos_seq[-size:]
+    else:
+        pad = size - s
+        k_w = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        v_w = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        pos_w = jnp.pad(pos_seq, (0, pad), constant_values=-1)
+    # ring caches are slot-addressed: rotate so slot = pos % size
+    roll = jnp.where(s >= size, (s % size), 0)
+    new = {"k": jnp.roll(k_w, roll, axis=1),
+           "v": jnp.roll(v_w, roll, axis=1),
+           "slot_pos": jnp.roll(pos_w, roll)}
+    return y, new
+
+
+def decode_step_attn(params, cfg: ModelConfig, x, pos, cache,
+                     sharder=None) -> Tuple[jnp.ndarray, Dict]:
+    """One-token decode. x (B, 1, d); pos scalar int32 (lockstep batch).
+
+    Full cache: slot == pos. Ring cache: slot == pos % size; masking is by
+    stored absolute slot positions, so both are one code path."""
+    positions = jnp.full((x.shape[0], 1), pos, jnp.int32)
+    if cfg.m_rope_sections is not None:
+        positions = jnp.broadcast_to(positions[None], (3,) + positions.shape)
+    q, k, v = _project_qkv(params, cfg, x, x, positions)
+    size = cache["k"].shape[1]
+    slot = jnp.mod(pos, size)
+    ck = jax.lax.dynamic_update_slice_in_dim(cache["k"], k, slot, axis=1)
+    cv = jax.lax.dynamic_update_slice_in_dim(cache["v"], v, slot, axis=1)
+    spos = jax.lax.dynamic_update_slice_in_dim(
+        cache["slot_pos"], jnp.array([pos], jnp.int32).reshape(1), slot,
+        axis=0)
+    valid = (spos >= 0) & (spos <= pos)
+    if cfg.swa_window is not None:
+        valid = valid & (spos > pos - cfg.swa_window)
+    mask = valid[None, None, :]                       # (1, 1, size)
+    out = _grouped_attend(q, ck, cv, mask, cfg, sharder=sharder)
+    dt = x.dtype
+    y = jnp.einsum("bshe,hed->bsd", out, params["wo"].astype(dt))
+    return y, {"k": ck, "v": cv, "slot_pos": spos}

@@ -1,0 +1,131 @@
+"""Decoder blocks: (attn | ssm) mixer + (dense | moe | none) FFN.
+
+Heterogeneous stacks (jamba) are grouped into repeating *periods*: the
+layer pattern within a period is static python structure, and the model
+scans over periods — so compile time stays O(period), not O(n_layers)."""
+from __future__ import annotations
+
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.common.param import KeyGen
+from repro.models import attention, layers, moe as moe_lib, ssm as ssm_lib
+from repro.models.config import ModelConfig
+
+
+def block_period(cfg: ModelConfig) -> int:
+    """Smallest repeating pattern of (mixer, ffn) kinds."""
+    p = 1
+    if cfg.attn_every:
+        p = cfg.attn_every
+    if cfg.moe is not None and cfg.moe.every > 1:
+        import math
+        p = math.lcm(p, cfg.moe.every)
+    assert cfg.n_layers % p == 0, (cfg.n_layers, p)
+    return p
+
+
+def init_block(key, cfg: ModelConfig, layer_idx: int) -> Dict:
+    kg = KeyGen(key)
+    kind = cfg.layer_kind(layer_idx)
+    ffn = cfg.ffn_kind(layer_idx)
+    p: Dict = {"norm1": layers.init_rmsnorm(cfg.d_model, cfg.pdtype)}
+    if kind == "attn":
+        p["attn"] = attention.init_attention(kg(), cfg)
+    else:
+        p["ssm"] = ssm_lib.init_ssm(kg(), cfg)
+    if ffn != "none":
+        p["norm2"] = layers.init_rmsnorm(cfg.d_model, cfg.pdtype)
+        if ffn == "moe":
+            p["moe"] = moe_lib.init_moe(kg(), cfg)
+        else:
+            p["mlp"] = layers.init_swiglu(kg(), cfg.d_model, cfg.d_ff,
+                                          cfg.pdtype)
+    return p
+
+
+def apply_block(params, cfg: ModelConfig, layer_idx: int, x, positions,
+                sharder=None) -> Tuple[jnp.ndarray, Dict]:
+    """Full-sequence (train) block. Returns (x, aux)."""
+    aux = {}
+    h = layers.rmsnorm(params["norm1"], x, cfg.norm_eps)
+    if cfg.layer_kind(layer_idx) == "attn":
+        mix = attention.attend_full(params["attn"], cfg, h, positions,
+                                    sharder=sharder)
+    else:
+        mix = ssm_lib.apply_ssm(params["ssm"], cfg, h, sharder=sharder)
+    x = x + mix
+    ffn = cfg.ffn_kind(layer_idx)
+    if ffn != "none":
+        h = layers.rmsnorm(params["norm2"], x, cfg.norm_eps)
+        if ffn == "moe":
+            y, aux = moe_lib.apply_moe(params["moe"], cfg, h,
+                                       sharder=sharder)
+        else:
+            y = layers.swiglu(params["mlp"], h, sharder=sharder)
+        x = x + y
+    if sharder is not None:
+        x = sharder(x, "batch", "act_seq", "act_embed")
+    return x, aux
+
+
+def init_block_cache(cfg: ModelConfig, layer_idx: int, batch: int,
+                     capacity: int) -> Dict:
+    if cfg.layer_kind(layer_idx) == "attn":
+        ring = cfg.swa_window is not None
+        return attention.init_kv_cache(cfg, batch, capacity, ring)
+    return ssm_lib.init_ssm_cache(cfg, batch)
+
+
+def block_cache_axes(cfg: ModelConfig, layer_idx: int) -> Dict:
+    if cfg.layer_kind(layer_idx) == "attn":
+        return attention.cache_logical_axes()
+    return ssm_lib.ssm_cache_logical_axes()
+
+
+def prefill_block(params, cfg: ModelConfig, layer_idx: int, x, positions,
+                  cache, sharder=None) -> Tuple[jnp.ndarray, Dict]:
+    h = layers.rmsnorm(params["norm1"], x, cfg.norm_eps)
+    if cfg.layer_kind(layer_idx) == "attn":
+        mix, new_cache = attention.prefill_into_cache(
+            params["attn"], cfg, h, positions, cache, sharder=sharder)
+    else:
+        mix, new_cache = ssm_lib.apply_ssm(params["ssm"], cfg, h,
+                                           sharder=sharder,
+                                           return_state=True)
+        new_cache = {
+            "ssm_state": new_cache["ssm_state"].astype(cfg.adtype),
+            "conv_state": new_cache["conv_state"].astype(cfg.adtype)}
+    x = x + mix
+    ffn = cfg.ffn_kind(layer_idx)
+    if ffn != "none":
+        h = layers.rmsnorm(params["norm2"], x, cfg.norm_eps)
+        if ffn == "moe":
+            y, _ = moe_lib.apply_moe(params["moe"], cfg, h, sharder=sharder)
+        else:
+            y = layers.swiglu(params["mlp"], h, sharder=sharder)
+        x = x + y
+    return x, new_cache
+
+
+def decode_block(params, cfg: ModelConfig, layer_idx: int, x, pos, cache,
+                 sharder=None) -> Tuple[jnp.ndarray, Dict]:
+    h = layers.rmsnorm(params["norm1"], x, cfg.norm_eps)
+    if cfg.layer_kind(layer_idx) == "attn":
+        mix, new_cache = attention.decode_step_attn(
+            params["attn"], cfg, h, pos, cache, sharder=sharder)
+    else:
+        mix, new_cache = ssm_lib.decode_step_ssm(params["ssm"], cfg, h,
+                                                 cache)
+    x = x + mix
+    ffn = cfg.ffn_kind(layer_idx)
+    if ffn != "none":
+        h = layers.rmsnorm(params["norm2"], x, cfg.norm_eps)
+        if ffn == "moe":
+            y, _ = moe_lib.apply_moe(params["moe"], cfg, h, sharder=sharder)
+        else:
+            y = layers.swiglu(params["mlp"], h, sharder=sharder)
+        x = x + y
+    return x, new_cache

@@ -1,0 +1,192 @@
+"""Shared LM layers: norms, projections, embeddings, RoPE (incl. M-RoPE)."""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.common.param import Boxed, KeyGen, normal_init, ones_init, \
+    scaled_init, zeros_init
+
+
+# ---------------------------------------------------------------- norms
+def init_rmsnorm(d: int, dtype=jnp.float32, axis_name: str = "embed"):
+    return {"scale": Boxed(jnp.ones((d,), dtype), (axis_name,))}
+
+
+def rmsnorm(params, x, eps: float = 1e-6):
+    # variance via f32-ACCUMULATING einsum: no f32 copy of x ever
+    # materializes (a (B,S,d) f32 temp per norm dominated jamba's
+    # dry-run memory before this)
+    var = jnp.einsum("...d,...d->...", x, x,
+                     preferred_element_type=jnp.float32)[..., None] \
+        / x.shape[-1]
+    inv = jax.lax.rsqrt(var + eps).astype(x.dtype)
+    return x * inv * params["scale"].astype(x.dtype)
+
+
+def init_layernorm(d: int, dtype=jnp.float32):
+    return {"scale": Boxed(jnp.ones((d,), dtype), ("embed",)),
+            "bias": Boxed(jnp.zeros((d,), dtype), ("embed",))}
+
+
+def layernorm(params, x, eps: float = 1e-5):
+    n = x.shape[-1]
+    mu = (jnp.einsum("...d->...", x,
+                     preferred_element_type=jnp.float32) / n)[..., None]
+    ex2 = (jnp.einsum("...d,...d->...", x, x,
+                      preferred_element_type=jnp.float32) / n)[..., None]
+    var = ex2 - mu * mu
+    inv = jax.lax.rsqrt(var + eps)
+    y = (x - mu.astype(x.dtype)) * inv.astype(x.dtype)
+    return y * params["scale"].astype(x.dtype) \
+        + params["bias"].astype(x.dtype)
+
+
+def head_rmsnorm(scale, x, eps: float = 1e-6):
+    """qk-norm: RMSNorm over the head_dim of (B, S, H, hd)."""
+    var = jnp.einsum("...d,...d->...", x, x,
+                     preferred_element_type=jnp.float32)[..., None] \
+        / x.shape[-1]
+    inv = jax.lax.rsqrt(var + eps).astype(x.dtype)
+    return x * inv * scale.astype(x.dtype)
+
+
+# ---------------------------------------------------------------- linear
+def init_linear(key, d_in: int, d_out: int, axes, dtype=jnp.float32,
+                bias: bool = False, bias_axes=None):
+    p = {"w": Boxed(scaled_init(key, (d_in, d_out), dtype=dtype), axes)}
+    if bias:
+        p["b"] = Boxed(jnp.zeros((d_out,), dtype),
+                       bias_axes or (axes[-1],))
+    return p
+
+
+def linear(params, x, act_dtype=None):
+    w = params["w"]
+    if act_dtype is not None:
+        w = w.astype(act_dtype)
+        x = x.astype(act_dtype)
+    y = x @ w
+    if "b" in params:
+        y = y + params["b"].astype(y.dtype)
+    return y
+
+
+# ---------------------------------------------------------------- embedding
+def init_embedding(key, vocab: int, d: int, dtype=jnp.float32):
+    return {"table": Boxed(normal_init(key, (vocab, d), dtype=dtype),
+                           ("vocab", "embed"))}
+
+
+def embed(params, ids, act_dtype):
+    return jnp.take(params["table"], ids, axis=0).astype(act_dtype)
+
+
+def unembed(params, x):
+    """Logits against the (vocab, embed) table; fp32 for the softmax."""
+    return jnp.einsum("...d,vd->...v", x.astype(jnp.bfloat16),
+                      params["table"].astype(jnp.bfloat16),
+                      preferred_element_type=jnp.float32)
+
+
+# ---------------------------------------------------------------- RoPE
+def rope_freqs(head_dim: int, theta: float) -> jnp.ndarray:
+    return 1.0 / (theta ** (jnp.arange(0, head_dim, 2,
+                                       dtype=jnp.float32) / head_dim))
+
+
+def apply_rope(x: jnp.ndarray, positions: jnp.ndarray,
+               theta: float) -> jnp.ndarray:
+    """x (B, S, H, hd), positions (B, S) -> rotated x (half-split layout)."""
+    hd = x.shape[-1]
+    freqs = rope_freqs(hd, theta)                       # (hd/2,)
+    ang = positions[..., None].astype(jnp.float32) * freqs  # (B, S, hd/2)
+    cos = jnp.cos(ang)[:, :, None, :]
+    sin = jnp.sin(ang)[:, :, None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos],
+                          axis=-1)
+    return out.astype(x.dtype)
+
+
+def apply_m_rope(x: jnp.ndarray, positions: jnp.ndarray, theta: float,
+                 sections: Tuple[int, int, int]) -> jnp.ndarray:
+    """Multimodal RoPE (qwen2-vl): positions (3, B, S) = (t, h, w) ids;
+    the hd/2 frequency slots are partitioned into ``sections`` groups, each
+    rotated by its own positional stream."""
+    hd = x.shape[-1]
+    assert sum(sections) == hd // 2, (sections, hd)
+    freqs = rope_freqs(hd, theta)                        # (hd/2,)
+    # build the per-slot angle from the right positional stream
+    angs = []
+    start = 0
+    for s, sec in enumerate(sections):
+        f = freqs[start:start + sec]
+        angs.append(positions[s][..., None].astype(jnp.float32) * f)
+        start += sec
+    ang = jnp.concatenate(angs, axis=-1)                 # (B, S, hd/2)
+    cos = jnp.cos(ang)[:, :, None, :]
+    sin = jnp.sin(ang)[:, :, None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos],
+                          axis=-1)
+    return out.astype(x.dtype)
+
+
+def sinusoidal_positions(seq: int, d: int) -> jnp.ndarray:
+    """Whisper encoder's fixed sinusoidal embedding (S, d)."""
+    pos = jnp.arange(seq, dtype=jnp.float32)[:, None]
+    div = jnp.exp(jnp.arange(0, d, 2, dtype=jnp.float32)
+                  * (-jnp.log(10000.0) / d))
+    pe = jnp.zeros((seq, d), jnp.float32)
+    pe = pe.at[:, 0::2].set(jnp.sin(pos * div))
+    pe = pe.at[:, 1::2].set(jnp.cos(pos * div))
+    return pe
+
+
+# ---------------------------------------------------------------- FFNs
+def init_swiglu(key, d: int, d_ff: int, dtype=jnp.float32):
+    kg = KeyGen(key)
+    return {
+        "w_gate": Boxed(scaled_init(kg(), (d, d_ff), dtype=dtype),
+                        ("embed", "mlp")),
+        "w_up": Boxed(scaled_init(kg(), (d, d_ff), dtype=dtype),
+                      ("embed", "mlp")),
+        "w_down": Boxed(scaled_init(kg(), (d_ff, d), dtype=dtype),
+                        ("mlp", "embed")),
+    }
+
+
+def swiglu(params, x, sharder=None):
+    dt = x.dtype
+    g = x @ params["w_gate"].astype(dt)
+    u = x @ params["w_up"].astype(dt)
+    # silu stays in the activation dtype: sigmoid saturates, bf16-safe,
+    # and an f32 (B,S,ff) temporary would double the layer's live bytes
+    h = jax.nn.silu(g) * u
+    if sharder is not None:
+        h = sharder(h, "batch", "act_seq", "act_mlp")
+    return h @ params["w_down"].astype(dt)
+
+
+def init_gelu_mlp(key, d: int, d_ff: int, dtype=jnp.float32):
+    kg = KeyGen(key)
+    return {
+        "w_up": Boxed(scaled_init(kg(), (d, d_ff), dtype=dtype),
+                      ("embed", "mlp")),
+        "b_up": Boxed(jnp.zeros((d_ff,), dtype), ("mlp",)),
+        "w_down": Boxed(scaled_init(kg(), (d_ff, d), dtype=dtype),
+                        ("mlp", "embed")),
+        "b_down": Boxed(jnp.zeros((d,), dtype), ("embed",)),
+    }
+
+
+def gelu_mlp(params, x, sharder=None):
+    dt = x.dtype
+    h = x @ params["w_up"].astype(dt) + params["b_up"].astype(dt)
+    h = jax.nn.gelu(h)
+    if sharder is not None:
+        h = sharder(h, "batch", "act_seq", "act_mlp")
+    return h @ params["w_down"].astype(dt) + params["b_down"].astype(dt)

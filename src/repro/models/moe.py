@@ -1,0 +1,138 @@
+"""Mixture-of-Experts FFN with top-k token-choice routing (qwen3-moe,
+olmoe, jamba).
+
+Dispatch is *grouped* gather/scatter (MaxText-style), not one-hot-einsum:
+
+  tokens are split into independent groups of ``group_size``; within a
+  group, each (token, k) assignment gets a position inside its expert's
+  per-group capacity slice via a LOCAL cumsum (no global prefix — groups
+  shard freely over the batch axes), tokens scatter into a
+  (G, E, C_g, d) buffer, experts run as batched einsums, results gather
+  back weighted by router probs.
+
+Why not the classic one-hot dispatch einsum: at 128 experts its FLOPs
+dwarf the expert FFN itself and destroy the MODEL_FLOPS/HLO_FLOPs
+roofline ratio. Why not a global cumsum: a (n*k, E) prefix across the
+full token axis forces cross-shard sequential collectives; per-group
+cumsums are embarrassingly parallel.
+
+EP: the expert dim shards over 'model'; groups shard over the batch axes;
+the scatter between the two layouts is the token<->expert all-to-all.
+Overflowing tokens drop (capacity_factor bounds the buffer — standard).
+"""
+from __future__ import annotations
+
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.common.param import Boxed, KeyGen, scaled_init
+from repro.models.config import ModelConfig, MoEConfig
+
+
+def init_moe(key, cfg: ModelConfig) -> Dict:
+    m = cfg.moe
+    kg = KeyGen(key)
+    d, e, h = cfg.d_model, m.n_experts, m.d_expert
+    dt = cfg.pdtype
+    return {
+        "router": Boxed(scaled_init(kg(), (d, e), dtype=dt),
+                        ("embed", "expert")),
+        "w_gate": Boxed(
+            jax.vmap(lambda k: scaled_init(k, (d, h), dtype=dt))(
+                jax.random.split(kg(), e)), ("expert", "embed", "expert_mlp")),
+        "w_up": Boxed(
+            jax.vmap(lambda k: scaled_init(k, (d, h), dtype=dt))(
+                jax.random.split(kg(), e)), ("expert", "embed", "expert_mlp")),
+        "w_down": Boxed(
+            jax.vmap(lambda k: scaled_init(k, (h, d), dtype=dt))(
+                jax.random.split(kg(), e)), ("expert", "expert_mlp", "embed")),
+    }
+
+
+def moe_group_size(m: MoEConfig, n_tokens: int) -> int:
+    """Largest group <= 4096 tokens that divides n (shapes are pow2)."""
+    target = min(4096, n_tokens)
+    return next(g for g in range(target, 0, -1) if n_tokens % g == 0)
+
+
+def moe_capacity(m: MoEConfig, group_size: int) -> int:
+    per = group_size * m.top_k / m.n_experts
+    return max(4, int(per * m.capacity_factor))
+
+
+def _dispatch_one_group(xg, expert_id, cap: int, n_experts: int,
+                        top_k: int):
+    """One group's dispatch. xg (S, d); expert_id (S, k).
+    Returns (buf (E, C, d), flat_expert, safe_pos, keep, token_idx)."""
+    s, d = xg.shape
+    flat_expert = expert_id.reshape(-1)                    # (S*k,)
+    onehot = jax.nn.one_hot(flat_expert, n_experts, dtype=jnp.int32)
+    pos = jnp.cumsum(onehot, axis=0) - 1                   # local prefix
+    flat_pos = jnp.take_along_axis(
+        pos, flat_expert[:, None], axis=1)[:, 0]
+    keep = flat_pos < cap
+    safe_pos = jnp.where(keep, flat_pos, cap - 1)
+    token_idx = jnp.repeat(jnp.arange(s), top_k)
+    buf = jnp.zeros((n_experts, cap, d), xg.dtype)
+    buf = buf.at[flat_expert, safe_pos].add(
+        jnp.where(keep[:, None], xg[token_idx], 0))
+    return buf, flat_expert, safe_pos, keep, token_idx
+
+
+def apply_moe(params, cfg: ModelConfig, x: jnp.ndarray,
+              sharder=None) -> Tuple[jnp.ndarray, Dict]:
+    """x (B, S, d) -> (y (B, S, d), aux metrics)."""
+    m = cfg.moe
+    b, s, d = x.shape
+    n = b * s
+    gsz = moe_group_size(m, n)
+    n_groups = n // gsz
+    cap = moe_capacity(m, gsz)
+    dt = x.dtype
+    xt = x.reshape(n_groups, gsz, d)
+    if sharder is not None:
+        # groups shard over the batch axes; tokens within a group stay
+        # local so the capacity cumsum never crosses shards
+        xt = sharder(xt, "batch", None, None)
+
+    logits = (xt @ params["router"].astype(dt)).astype(jnp.float32)
+    probs = jax.nn.softmax(logits, axis=-1)                # (G, S, E)
+    gate, expert_id = jax.lax.top_k(probs, m.top_k)        # (G, S, k)
+    gate = gate / jnp.sum(gate, axis=-1, keepdims=True)
+
+    buf, flat_expert, safe_pos, keep, token_idx = jax.vmap(
+        lambda xg, eid: _dispatch_one_group(
+            xg, eid, cap, m.n_experts, m.top_k),
+        in_axes=(0, 0))(xt, expert_id)
+    if sharder is not None:   # (G, E, C, d): the token->expert a2a
+        buf = sharder(buf, "batch", "act_expert", None, None)
+
+    # batched expert FFN (SwiGLU): contraction batched over (E); G folds
+    # into the capacity rows so each expert sees one matmul
+    g_ = jnp.einsum("gecd,edh->gech", buf, params["w_gate"].astype(dt))
+    u_ = jnp.einsum("gecd,edh->gech", buf, params["w_up"].astype(dt))
+    h_ = jax.nn.silu(g_.astype(jnp.float32)).astype(dt) * u_
+    out = jnp.einsum("gech,ehd->gecd", h_, params["w_down"].astype(dt))
+    if sharder is not None:   # expert -> token a2a back
+        out = sharder(out, "batch", "act_expert", None, None)
+
+    def _combine(outg, fe, sp, kp, ti, gateg):
+        picked = outg[fe, sp]                              # (S*k, d)
+        picked = jnp.where(kp[:, None], picked, 0)
+        return jnp.zeros((gsz, d), dt).at[ti].add(
+            picked * gateg.reshape(-1)[:, None].astype(dt))
+
+    y = jax.vmap(_combine)(out, flat_expert, safe_pos, keep, token_idx,
+                           gate)
+
+    density = jnp.mean(
+        jax.nn.one_hot(expert_id, m.n_experts, dtype=jnp.float32),
+        axis=(0, 1, 2))
+    router_mean = jnp.mean(probs, axis=(0, 1))
+    aux = {
+        "moe_aux_loss": m.n_experts * jnp.sum(density * router_mean),
+        "moe_drop_frac": 1.0 - jnp.mean(keep.astype(jnp.float32)),
+    }
+    return y.reshape(b, s, d), aux

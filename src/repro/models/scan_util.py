@@ -1,0 +1,26 @@
+"""lax.scan with an unrolled-python-loop twin (identical semantics).
+
+The unrolled form exists for the dry-run FLOP probes: XLA's
+HloCostAnalysis counts a while-loop body once, independent of trip count,
+so roofline FLOP/byte/collective totals are extrapolated from two small
+unrolled compiles (see launch/dryrun.py::probe_cell)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def scan_or_unroll(body, carry, xs, use_scan: bool):
+    if use_scan:
+        return jax.lax.scan(body, carry, xs)
+    n = jax.tree.leaves(xs)[0].shape[0]
+    ys = []
+    for i in range(n):
+        xs_i = jax.tree.map(lambda a: a[i], xs)
+        carry, y = body(carry, xs_i)
+        ys.append(y)
+    if ys and ys[0] is not None:
+        y_stacked = jax.tree.map(lambda *ls: jnp.stack(ls), *ys)
+    else:
+        y_stacked = None
+    return carry, y_stacked

@@ -1,0 +1,250 @@
+"""Mamba-2 (SSD — state-space duality) blocks, TPU-adapted.
+
+The SSD form is chosen deliberately: it re-expresses the selective-scan as
+chunked *matmuls* (intra-chunk quadratic term + inter-chunk state
+recurrence), which is the MXU-friendly formulation — the same
+hardware-adaptation logic the paper applies to its MLP engine (DESIGN.md:
+Jamba's Mamba-1 layers are also realized in SSD form for this reason).
+
+Train/prefill: chunked SSD with a lax.scan over chunks carrying the
+(H, hd, N) state. Decode: O(1) recurrent update. Both paths share
+parameters and are cross-validated in tests (chunked == recurrent).
+"""
+from __future__ import annotations
+
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.common.param import Boxed, KeyGen, scaled_init
+from repro.models import layers
+from repro.models.config import ModelConfig
+
+
+def init_ssm(key, cfg: ModelConfig) -> Dict:
+    s = cfg.ssm
+    d = cfg.d_model
+    di = s.d_inner(d)
+    nh = s.n_heads(d)
+    g = s.n_groups * s.d_state
+    conv_dim = di + 2 * g
+    kg = KeyGen(key)
+    dt = cfg.pdtype
+    return {
+        # in_proj emits [z (di), x (di), B (g), C (g), dt (nh)]
+        "w_in": Boxed(scaled_init(kg(), (d, 2 * di + 2 * g + nh), dtype=dt),
+                      ("embed", "ssm_inner")),
+        "conv_w": Boxed(
+            0.1 * jax.random.normal(kg(), (s.d_conv, conv_dim)).astype(dt),
+            ("conv", "ssm_inner")),
+        "conv_b": Boxed(jnp.zeros((conv_dim,), dt), ("ssm_inner",)),
+        "A_log": Boxed(jnp.log(jnp.linspace(1.0, 16.0, nh)).astype(dt),
+                       ("ssm_inner",)),
+        "D": Boxed(jnp.ones((nh,), dt), ("ssm_inner",)),
+        "dt_bias": Boxed(jnp.log(jnp.expm1(
+            jnp.full((nh,), 0.01))).astype(dt), ("ssm_inner",)),
+        "norm_scale": Boxed(jnp.ones((di,), dt), ("ssm_inner",)),
+        "w_out": Boxed(scaled_init(kg(), (di, d), dtype=dt),
+                       ("ssm_inner", "embed")),
+    }
+
+
+def _split_in_proj(cfg: ModelConfig, zxbcdt):
+    s = cfg.ssm
+    di = s.d_inner(cfg.d_model)
+    g = s.n_groups * s.d_state
+    nh = s.n_heads(cfg.d_model)
+    z, x, B, C, dt = jnp.split(
+        zxbcdt, [di, 2 * di, 2 * di + g, 2 * di + 2 * g], axis=-1)
+    return z, x, B, C, dt
+
+
+def _causal_conv(x, w, b, state: Optional[jnp.ndarray] = None):
+    """Depthwise causal conv1d. x (B, S, C), w (K, C). If ``state``
+    ((B, K-1, C)) is given, prepends it (decode/streaming)."""
+    k = w.shape[0]
+    w = w.astype(x.dtype)
+    b = b.astype(x.dtype)
+    if state is None:
+        pad = jnp.zeros((x.shape[0], k - 1, x.shape[2]), x.dtype)
+    else:
+        pad = state.astype(x.dtype)
+    xp = jnp.concatenate([pad, x], axis=1)
+    out = sum(xp[:, i:i + x.shape[1]] * w[i][None, None, :]
+              for i in range(k))
+    out = out + b[None, None, :]
+    return jax.nn.silu(out), xp[:, -(k - 1):]
+
+
+def ssd_chunked(x, dt, A, B, C, chunk: int, unroll: bool = False,
+                sharder=None):
+    """Chunked SSD scan.
+
+    x (b, s, h, p); dt (b, s, h) [post-softplus]; A (h,) [negative];
+    B, C (b, s, g, n) with heads h divisible by groups g.
+    Returns (y (b, s, h, p), final_state (b, h, p, n)).
+    """
+    b, s, h, p = x.shape
+    g, n = B.shape[2], B.shape[3]
+    assert s % chunk == 0, (s, chunk)
+    nc = s // chunk
+    rep = h // g
+
+    # reshape to chunks; chunks are seq-parallel for the (quadratic)
+    # intra-chunk work — pin the nc dim to the SP axis so the
+    # (b, nc, q, q, h) decay/score tensors shard instead of replicating
+    xc = x.reshape(b, nc, chunk, h, p)
+    dtc = dt.reshape(b, nc, chunk, h)
+    Bc = B.reshape(b, nc, chunk, g, n)
+    Cc = C.reshape(b, nc, chunk, g, n)
+    if sharder is not None and nc > 1:
+        xc = sharder(xc, "batch", "act_seq", None, "ssm_inner", None)
+        dtc = sharder(dtc, "batch", "act_seq", None, "ssm_inner")
+        Bc = sharder(Bc, "batch", "act_seq", None, None, None)
+        Cc = sharder(Cc, "batch", "act_seq", None, None, None)
+
+    dA = dtc * A[None, None, None, :]                 # (b, nc, q, h) <= 0
+    cums = jnp.cumsum(dA, axis=2)                     # within-chunk cumsum
+
+    # --- intra-chunk (quadratic in chunk len; all matmuls) ---
+    # L[i,j] = exp(cums_i - cums_j) * dt_j  for j <= i
+    seg = cums[:, :, :, None, :] - cums[:, :, None, :, :]   # (b,nc,q,q,h)
+    qi = jnp.arange(chunk)
+    causal = (qi[:, None] >= qi[None, :])[None, None, :, :, None]
+    L = jnp.where(causal, jnp.exp(seg), 0.0) * dtc[:, :, None, :, :]
+    CB = jnp.einsum("bcigm,bcjgm->bcijg", Cc, Bc)     # (b,nc,q,q,g)
+    CBh = jnp.repeat(CB, rep, axis=-1)                # (b,nc,q,q,h)
+    y_intra = jnp.einsum("bcijh,bcjhp->bcihp",
+                         (CBh * L).astype(x.dtype), xc)
+
+    # --- inter-chunk state recurrence (scan over chunks) ---
+    decay_chunk = jnp.exp(cums[:, :, -1])             # (b, nc, h)
+    # state contribution of each chunk: sum_j exp(cums_last - cums_j) dt_j B_j x_j
+    w = jnp.exp(cums[:, :, -1:, :] - cums) * dtc      # (b, nc, q, h)
+    Bh = jnp.repeat(Bc, rep, axis=-2)                 # (b, nc, q, h, n)
+    chunk_state = jnp.einsum("bcqh,bcqhn,bcqhp->bchpn",
+                             w.astype(x.dtype), Bh.astype(x.dtype), xc)
+
+    def scan_fn(state, inp):
+        dc, cs = inp                                  # (b,h), (b,h,p,n)
+        new = state * dc[:, :, None, None] + cs
+        return new, state                              # emit state BEFORE chunk
+
+    from repro.models.scan_util import scan_or_unroll
+    init = jnp.zeros((b, h, p, n), x.dtype)
+    final, prev_states = scan_or_unroll(
+        scan_fn, init,
+        (jnp.moveaxis(decay_chunk, 1, 0).astype(x.dtype),
+         jnp.moveaxis(chunk_state, 1, 0)), not unroll)
+    prev_states = jnp.moveaxis(prev_states, 0, 1)     # (b, nc, h, p, n)
+
+    # --- contribution of carried state to each position ---
+    Ch = jnp.repeat(Cc, rep, axis=-2)                 # (b, nc, q, h, n)
+    outw = jnp.exp(cums)                              # (b, nc, q, h)
+    y_inter = jnp.einsum("bcqhn,bchpn,bcqh->bcqhp",
+                         Ch.astype(x.dtype), prev_states,
+                         outw.astype(x.dtype))
+    y = (y_intra + y_inter).reshape(b, s, h, p)
+    return y, final
+
+
+def apply_ssm(params, cfg: ModelConfig, x, sharder=None,
+              return_state: bool = False):
+    """Full-sequence Mamba-2 block. x (B, S, d) -> (B, S, d)."""
+    s_cfg = cfg.ssm
+    dt_act = x.dtype
+    b, s, d = x.shape
+    di = s_cfg.d_inner(d)
+    nh = s_cfg.n_heads(d)
+
+    zxbcdt = x @ params["w_in"].astype(dt_act)
+    z, xin, B, C, dtp = _split_in_proj(cfg, zxbcdt)
+    conv_in = jnp.concatenate([xin, B, C], axis=-1)
+    conv_out, conv_state = _causal_conv(conv_in, params["conv_w"],
+                                        params["conv_b"])
+    xin, B, C = jnp.split(conv_out, [di, di + s_cfg.n_groups
+                                     * s_cfg.d_state], axis=-1)
+    # softplus in the activation dtype THEN promote: an f32 cast before
+    # the split/concat would force the whole in_proj cotangent
+    # (b, s, 2*di+...) to f32 in the backward pass
+    dtv = jax.nn.softplus(
+        dtp + params["dt_bias"].astype(dt_act)).astype(jnp.float32)
+    A = -jnp.exp(params["A_log"].astype(jnp.float32))
+
+    xh = xin.reshape(b, s, nh, s_cfg.head_dim)
+    Bh = B.reshape(b, s, s_cfg.n_groups, s_cfg.d_state)
+    Ch = C.reshape(b, s, s_cfg.n_groups, s_cfg.d_state)
+    # largest chunk <= cfg.chunk that divides s (assigned shapes are
+    # powers of two; odd test lengths degrade gracefully)
+    chunk = next(c for c in range(min(s_cfg.chunk, s), 0, -1) if s % c == 0)
+    y, state = ssd_chunked(xh, dtv, A, Bh, Ch, chunk,
+                           unroll=cfg.unroll_chunks, sharder=sharder)
+    y = y + params["D"].astype(dt_act)[None, None, :, None] * xh
+    y = y.reshape(b, s, di)
+    # gated RMSNorm (mamba2's norm_before_gate=False path)
+    y = layers.rmsnorm({"scale": params["norm_scale"]}, y, cfg.norm_eps)
+    y = y * jax.nn.silu(z)
+    out = y @ params["w_out"].astype(dt_act)
+    if return_state:
+        return out, {"ssm_state": state, "conv_state": conv_state}
+    return out
+
+
+def init_ssm_cache(cfg: ModelConfig, batch: int) -> Dict:
+    s = cfg.ssm
+    d = cfg.d_model
+    nh = s.n_heads(d)
+    conv_dim = s.d_inner(d) + 2 * s.n_groups * s.d_state
+    return {
+        "ssm_state": jnp.zeros((batch, nh, s.head_dim, s.d_state),
+                               cfg.adtype),
+        "conv_state": jnp.zeros((batch, s.d_conv - 1, conv_dim), cfg.adtype),
+    }
+
+
+def ssm_cache_logical_axes() -> Dict:
+    return {"ssm_state": ("batch", "ssm_inner", None, None),
+            "conv_state": ("batch", None, "ssm_inner")}
+
+
+def decode_step_ssm(params, cfg: ModelConfig, x, cache) -> Tuple:
+    """One-token recurrence. x (B, 1, d)."""
+    s_cfg = cfg.ssm
+    dt_act = x.dtype
+    b, _, d = x.shape
+    di = s_cfg.d_inner(d)
+    nh = s_cfg.n_heads(d)
+
+    zxbcdt = x @ params["w_in"].astype(dt_act)
+    z, xin, B, C, dtp = _split_in_proj(cfg, zxbcdt)
+    conv_in = jnp.concatenate([xin, B, C], axis=-1)        # (B, 1, conv_dim)
+    conv_out, conv_state = _causal_conv(conv_in, params["conv_w"],
+                                        params["conv_b"],
+                                        state=cache["conv_state"])
+    xin, B, C = jnp.split(conv_out, [di, di + s_cfg.n_groups
+                                     * s_cfg.d_state], axis=-1)
+    dtv = jax.nn.softplus(dtp.astype(jnp.float32)
+                          + params["dt_bias"].astype(jnp.float32))[:, 0]
+    A = -jnp.exp(params["A_log"].astype(jnp.float32))       # (h,)
+
+    xh = xin.reshape(b, nh, s_cfg.head_dim)
+    Bh = jnp.repeat(B.reshape(b, s_cfg.n_groups, s_cfg.d_state),
+                    nh // s_cfg.n_groups, axis=1)            # (b, h, n)
+    Ch = jnp.repeat(C.reshape(b, s_cfg.n_groups, s_cfg.d_state),
+                    nh // s_cfg.n_groups, axis=1)
+
+    decay = jnp.exp(dtv * A[None, :])                        # (b, h)
+    state = cache["ssm_state"].astype(jnp.float32)
+    state = state * decay[:, :, None, None] + \
+        (dtv[:, :, None] * xh.astype(jnp.float32))[:, :, :, None] \
+        * Bh.astype(jnp.float32)[:, :, None, :]
+    y = jnp.einsum("bhpn,bhn->bhp", state, Ch.astype(jnp.float32))
+    y = y + params["D"].astype(jnp.float32)[None, :, None] \
+        * xh.astype(jnp.float32)
+    y = y.reshape(b, 1, di).astype(dt_act)
+    y = layers.rmsnorm({"scale": params["norm_scale"]}, y, cfg.norm_eps)
+    y = y * jax.nn.silu(z)
+    out = y @ params["w_out"].astype(dt_act)
+    return out, {"ssm_state": state.astype(cache["ssm_state"].dtype),
+                 "conv_state": conv_state.astype(cache["conv_state"].dtype)}

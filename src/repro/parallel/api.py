@@ -1,0 +1,333 @@
+"""Sharded train / prefill / decode step builders.
+
+This is the distribution layer: abstract-init the model, map logical axes
+to mesh PartitionSpecs (with divisibility fallback), and build jitted
+steps with explicit in/out shardings. Used identically by the real
+trainer/server and by the 512-device dry-run (which lowers against
+ShapeDtypeStructs)."""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.common.param import Boxed, unbox
+from repro.common.partitioning import (ActivationSharder, LogicalRules,
+                                       DEFAULT_RULES, logical_to_spec,
+                                       specs_to_shardings)
+from repro.configs.shapes import SHAPES
+from repro.models import encdec, lm
+from repro.models.config import ModelConfig
+from repro.train import optim
+
+
+# ------------------------------------------------------------------ helpers
+def _is_axes(x):
+    return isinstance(x, tuple) and all(a is None or isinstance(a, str)
+                                        for a in x)
+
+
+def abstract_params(cfg: ModelConfig, seed: int = 0):
+    """(ShapeDtypeStruct tree, logical axes tree) without allocating."""
+    def init(key):
+        if cfg.is_encdec:
+            return encdec.init_encdec(key, cfg)
+        return lm.init_lm(key, cfg)
+    boxed = jax.eval_shape(init, jax.random.PRNGKey(seed))
+    return unbox(boxed)
+
+
+def init_params(cfg: ModelConfig, seed: int = 0, mesh: Optional[Mesh] = None,
+                rules: Optional[LogicalRules] = None):
+    """Materialize params (small/local configs), optionally sharded."""
+    def init(key):
+        if cfg.is_encdec:
+            return unbox(encdec.init_encdec(key, cfg))[0]
+        return unbox(lm.init_lm(key, cfg))[0]
+    if mesh is None:
+        return jax.jit(init)(jax.random.PRNGKey(seed))
+    shapes, axes = abstract_params(cfg, seed)
+    specs = logical_to_spec(axes, mesh, rules or DEFAULT_RULES, shapes)
+    return jax.jit(init, out_shardings=specs_to_shardings(specs, mesh))(
+        jax.random.PRNGKey(seed))
+
+
+def param_specs(cfg: ModelConfig, mesh: Mesh, rules: LogicalRules):
+    shapes, axes = abstract_params(cfg)
+    return shapes, logical_to_spec(axes, mesh, rules, shapes)
+
+
+def batch_logical_axes(cfg: ModelConfig, batch: Dict) -> Dict:
+    """Logical axes for every input tensor of a train/prefill batch."""
+    out = {}
+    for name, v in batch.items():
+        if name == "positions" and v.ndim == 3:
+            out[name] = (None, "batch", "act_seq")
+        elif name in ("embeddings", "enc_embeddings"):
+            out[name] = ("batch", "act_seq", "act_embed")
+        else:                       # tokens / labels
+            out[name] = ("batch", "act_seq")
+    return out
+
+
+def batch_specs(cfg: ModelConfig, batch, mesh: Mesh, rules: LogicalRules):
+    axes = batch_logical_axes(cfg, batch)
+    return logical_to_spec(axes, mesh, rules, batch)
+
+
+# --------------------------------------------------------------- TrainState
+@dataclasses.dataclass(frozen=True)
+class TrainConfig:
+    optimizer: optim.AdamConfig = optim.AdamConfig(
+        lr=3e-4, b2=0.95, eps=1e-8, grad_clip=1.0, lr_warmup_steps=100)
+    num_microbatches: int = 1
+    compression: Optional[str] = None      # None | 'topk' | 'int8'
+    compression_topk: float = 0.05
+    # cast f32 master params to the activation dtype ONCE at step start,
+    # on the sharded layout — the FSDP all-gather then moves bf16, not
+    # f32 (halves weight-gather collective bytes AND the gathered-weight
+    # live buffers; grads still accumulate into the f32 master)
+    cast_params_once: bool = True
+
+
+def cast_params_for_compute(params, adtype, shardings=None):
+    """bf16 compute copy of the f32 master params. ``shardings`` pins the
+    copy to the master's own (sharded) layout so the SPMD partitioner
+    converts shard-locally and the downstream FSDP all-gather moves bf16
+    (otherwise it may gather f32 and convert after — 2x the bytes)."""
+    def cast(p, s=None):
+        if p.dtype != jnp.float32 or p.ndim < 2:
+            return p
+        c = p.astype(adtype)
+        if s is not None:
+            c = jax.lax.with_sharding_constraint(c, s)
+        return c
+    if shardings is None:
+        return jax.tree.map(cast, params)
+    return jax.tree.map(cast, params, shardings)
+
+
+def make_train_state(params, compression: bool = False):
+    state = {"params": params, "opt": optim.adam_init(params)}
+    if compression:   # persistent error-feedback buffers
+        state["efb"] = jax.tree.map(jnp.zeros_like, params)
+    return state
+
+
+def train_state_specs(pspecs, compression: bool = False):
+    specs = {"params": pspecs, "opt": optim.AdamState(
+        step=P(), mu=pspecs, nu=pspecs)}
+    if compression:
+        specs["efb"] = pspecs
+    return specs
+
+
+def _loss_for(cfg: ModelConfig):
+    return encdec.loss_fn if cfg.is_encdec else lm.loss_fn
+
+
+def make_train_step(cfg: ModelConfig, mesh: Mesh,
+                    rules: Optional[LogicalRules] = None,
+                    train_cfg: Optional[TrainConfig] = None,
+                    batch_shardings=None,
+                    example_batch=None) -> Tuple[Callable, Dict]:
+    """Build the jitted sharded train step.
+
+    Returns (step, shardings) where
+      step(state, batch) -> (state, metrics)
+    and shardings = {'state': ..., 'batch': ...} (NamedShardings).
+    """
+    rules = rules or DEFAULT_RULES
+    train_cfg = train_cfg or TrainConfig()
+    loss_fn = _loss_for(cfg)
+    sharder = ActivationSharder(mesh, rules)
+
+    pshapes, pspecs = param_specs(cfg, mesh, rules)
+    state_specs = train_state_specs(
+        pspecs, compression=train_cfg.compression is not None)
+    state_shardings = specs_to_shardings(state_specs, mesh)
+
+    def compute_grads(params, batch):
+        def loss_of(p):
+            if train_cfg.cast_params_once:
+                p = cast_params_for_compute(
+                    p, cfg.adtype, state_shardings["params"])
+            return loss_fn(p, cfg, batch, sharder=sharder)
+        (loss, aux), grads = jax.value_and_grad(
+            loss_of, has_aux=True)(params)
+        return loss, aux, grads
+
+    def step(state, batch):
+        params = state["params"]
+        nmb = train_cfg.num_microbatches
+        if nmb > 1:
+            # microbatch accumulation: scan so XLA overlaps the grad
+            # all-reduce of microbatch k with compute of k+1
+            def to_mb(x):
+                if x.ndim == 3 and x.shape[0] == 3:   # m-rope positions
+                    y = x.reshape(3, nmb, x.shape[1] // nmb, x.shape[2])
+                    return jnp.moveaxis(y, 0, 1)
+                return x.reshape((nmb, x.shape[0] // nmb) + x.shape[1:])
+            mb = jax.tree.map(to_mb, batch)
+
+            def acc_body(carry, mbatch):
+                loss_a, grads_a = carry
+                loss, aux, grads = compute_grads(params, mbatch)
+                acc = jax.tree.map(jnp.add, grads_a, grads)
+                # pin the accumulator to the param sharding — as a bare
+                # scan carry the partitioner may leave it replicated
+                # (full f32 MoE grads = tens of GB per device)
+                acc = jax.tree.map(
+                    jax.lax.with_sharding_constraint, acc,
+                    state_shardings["params"])
+                return (loss_a + loss, acc), aux
+
+            zeros = jax.tree.map(
+                lambda s: jnp.zeros(s.shape, s.dtype), pshapes)
+            (loss, grads), aux = jax.lax.scan(
+                acc_body, (jnp.zeros((), jnp.float32), zeros), mb)
+            loss = loss / nmb
+            grads = jax.tree.map(lambda g: g / nmb, grads)
+            aux = jax.tree.map(lambda a: a[-1], aux)
+        else:
+            loss, aux, grads = compute_grads(params, batch)
+
+        if train_cfg.compression is not None:
+            from repro.train import compression
+            grads, state = compression.apply_inline(
+                grads, state, train_cfg)
+
+        new_params, new_opt, metrics = optim.adam_update(
+            grads, state["opt"], params, train_cfg.optimizer)
+        metrics["loss"] = loss
+        if isinstance(aux, dict):
+            metrics.update({k: v for k, v in aux.items()
+                            if jnp.ndim(v) == 0})
+        new_state = dict(state)
+        new_state["params"] = new_params
+        new_state["opt"] = new_opt
+        return new_state, metrics
+
+    if example_batch is not None and batch_shardings is None:
+        bspecs = batch_specs(cfg, example_batch["batch"], mesh, rules)
+        batch_shardings = specs_to_shardings(bspecs, mesh)
+
+    jit_step = jax.jit(
+        step,
+        in_shardings=(state_shardings, batch_shardings),
+        out_shardings=(state_shardings, None),
+        donate_argnums=(0,),
+    )
+    return jit_step, {"state": state_shardings, "batch": batch_shardings,
+                      "state_specs": state_specs}
+
+
+# ----------------------------------------------------------------- serving
+def cache_specs(cfg: ModelConfig, mesh: Mesh, rules: LogicalRules,
+                batch: int, capacity: int, enc_len: int = 0):
+    if cfg.is_encdec:
+        cache_shape = jax.eval_shape(
+            lambda: encdec.init_dec_cache(cfg, batch, capacity,
+                                          enc_len or capacity))
+        from repro.models.attention import cache_logical_axes
+        n = cfg.n_layers
+        axes = {
+            "self": {k: ("layers",) + v
+                     for k, v in cache_logical_axes().items()},
+            "cross": {"k": ("layers", "batch", "act_seq", "kv_heads",
+                            "head_dim"),
+                      "v": ("layers", "batch", "act_seq", "kv_heads",
+                            "head_dim")},
+        }
+    else:
+        cache_shape = jax.eval_shape(
+            lambda: lm.init_cache(cfg, batch, capacity))
+        axes = lm.cache_logical_axes(cfg)
+    specs = logical_to_spec(axes, mesh, rules, cache_shape)
+    return cache_shape, specs
+
+
+def make_cache(cfg: ModelConfig, batch: int, capacity: int,
+               enc_len: int = 0, shardings=None):
+    """Properly initialized cache (slot_pos = -1 sentinel, NOT zeros),
+    optionally placed onto the mesh."""
+    if cfg.is_encdec:
+        cache = encdec.init_dec_cache(cfg, batch, capacity,
+                                      enc_len or capacity)
+    else:
+        cache = lm.init_cache(cfg, batch, capacity)
+    if shardings is not None:
+        cache = jax.device_put(cache, shardings)
+    return cache
+
+
+def make_prefill_step(cfg: ModelConfig, mesh: Mesh,
+                      rules: Optional[LogicalRules] = None,
+                      batch_shardings=None, example_batch=None,
+                      capacity: Optional[int] = None, batch_size: int = 1,
+                      enc_len: int = 0):
+    rules = rules or DEFAULT_RULES
+    sharder = ActivationSharder(mesh, rules)
+    pshapes, pspecs = param_specs(cfg, mesh, rules)
+    pshardings = specs_to_shardings(pspecs, mesh)
+    cshapes, cspecs = cache_specs(cfg, mesh, rules, batch_size,
+                                  capacity, enc_len)
+    cshardings = specs_to_shardings(cspecs, mesh)
+
+    def step(params, batch, cache):
+        params = cast_params_for_compute(params, cfg.adtype)
+        if cfg.is_encdec:
+            return encdec.prefill(params, cfg, batch, cache,
+                                  sharder=sharder)
+        return lm.prefill(params, cfg, batch, cache, sharder=sharder)
+
+    if example_batch is not None and batch_shardings is None:
+        bspecs = batch_specs(cfg, example_batch["batch"], mesh, rules)
+        batch_shardings = specs_to_shardings(bspecs, mesh)
+
+    jit_step = jax.jit(step,
+                       in_shardings=(pshardings, batch_shardings,
+                                     cshardings),
+                       out_shardings=(None, cshardings),
+                       donate_argnums=(2,))
+    return jit_step, {"params": pshardings, "cache": cshardings,
+                      "cache_shapes": cshapes}
+
+
+def make_decode_step(cfg: ModelConfig, mesh: Mesh,
+                     rules: Optional[LogicalRules] = None,
+                     capacity: int = 1024, batch_size: int = 1,
+                     enc_len: int = 0):
+    """decode(params, cache, tokens (B,1), pos ()) -> (logits, cache)."""
+    rules = rules or DEFAULT_RULES
+    sharder = ActivationSharder(mesh, rules)
+    pshapes, pspecs = param_specs(cfg, mesh, rules)
+    pshardings = specs_to_shardings(pspecs, mesh)
+    cshapes, cspecs = cache_specs(cfg, mesh, rules, batch_size,
+                                  capacity, enc_len)
+    cshardings = specs_to_shardings(cspecs, mesh)
+
+    tok_sharding = NamedSharding(
+        mesh, P(("pod", "data") if "pod" in mesh.shape else "data", None)
+        if batch_size % (mesh.shape.get("data", 1)
+                         * mesh.shape.get("pod", 1)) == 0 else P())
+
+    def step(params, cache, tokens, pos):
+        params = cast_params_for_compute(params, cfg.adtype)
+        if cfg.is_encdec:
+            return encdec.decode_step(params, cfg, tokens, pos, cache,
+                                      sharder=sharder)
+        return lm.decode_step(params, cfg, tokens, pos, cache,
+                              sharder=sharder)
+
+    jit_step = jax.jit(step,
+                       in_shardings=(pshardings, cshardings, tok_sharding,
+                                     None),
+                       out_shardings=(None, cshardings),
+                       donate_argnums=(1,))
+    return jit_step, {"params": pshardings, "cache": cshardings,
+                      "cache_shapes": cshapes}

@@ -1,0 +1,95 @@
+"""Elastic scaling: rebuild the mesh after node loss and resume.
+
+The checkpoint layout is mesh-independent (checkpoint/store.py), so the
+recovery procedure is pure policy:
+
+  1. FailurePolicy emits a FailureEvent (dead hosts / stragglers).
+  2. remesh_plan() picks the largest valid (data, model) grid over the
+     surviving chips, preferring to shrink 'data' (gradient-noise-scale
+     degrades gracefully; TP degree is tied to weight-shard divisibility).
+  3. The launcher rebuilds jitted steps against the new mesh and restores
+     the latest checkpoint with the new shardings (reshard-on-device_put).
+
+Batch handling on shrink: global batch is preserved by raising
+per-replica microbatching (grad accumulation), so the optimizer schedule
+is unchanged — the step counter continues from the checkpoint."""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import List, Optional, Tuple
+
+import jax
+
+
+@dataclasses.dataclass(frozen=True)
+class MeshPlan:
+    data: int
+    model: int
+    microbatch_multiplier: int     # grad-accum factor to keep global batch
+
+    @property
+    def chips(self) -> int:
+        return self.data * self.model
+
+
+def _divisors_desc(n: int) -> List[int]:
+    return sorted({d for i in range(1, int(math.isqrt(n)) + 1)
+                   if n % i == 0 for d in (i, n // i)}, reverse=True)
+
+
+def remesh_plan(surviving_chips: int, old_data: int, old_model: int,
+                max_model: Optional[int] = None) -> MeshPlan:
+    """Largest usable mesh on the survivors.
+
+    Keeps 'model' as close to the old TP degree as possible (weight shard
+    divisibility), shrinks 'data', and returns the grad-accum multiplier
+    that preserves the global batch."""
+    max_model = max_model or old_model
+    best = None
+    for model in _divisors_desc(surviving_chips):
+        if model > max_model:
+            continue
+        if old_model % model != 0:   # keep weight divisibility
+            continue
+        data = surviving_chips // model
+        score = (model == old_model, model, data)
+        if best is None or score > best[0]:
+            best = (score, MeshPlan(
+                data=data, model=model,
+                microbatch_multiplier=max(1, math.ceil(
+                    old_data / data))))
+    if best is None:
+        raise ValueError(f"no valid mesh for {surviving_chips} chips")
+    return best[1]
+
+
+def build_mesh(plan: MeshPlan):
+    devices = jax.devices()[:plan.chips]
+    import numpy as np
+    return jax.sharding.Mesh(
+        np.array(devices).reshape(plan.data, plan.model),
+        ("data", "model"))
+
+
+def recover(checkpoint_dir, cfg, plan: MeshPlan, rules=None,
+            make_step=None):
+    """Rebuild (mesh, step_fn, state) from the latest checkpoint on the
+    post-failure mesh. Returns (mesh, step_fn, state, resumed_step)."""
+    from repro.checkpoint import store
+    from repro.common.partitioning import DEFAULT_RULES, specs_to_shardings
+    from repro.parallel import api
+    from repro.train import optim
+
+    rules = rules or DEFAULT_RULES.copy_with()
+    mesh = build_mesh(plan)
+    pshapes, pspecs = api.param_specs(cfg, mesh, rules)
+    state_sds = {"params": pshapes,
+                 "opt": jax.eval_shape(optim.adam_init, pshapes)}
+    state_specs = api.train_state_specs(pspecs)
+    shardings = specs_to_shardings(state_specs, mesh)
+    step = store.latest_step(checkpoint_dir)
+    state = store.restore(checkpoint_dir, state_sds, step=step,
+                          shardings=shardings)
+    step_fn = make_step(cfg, mesh, rules) if make_step else None
+    return mesh, step_fn, state, step

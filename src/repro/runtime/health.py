@@ -1,0 +1,104 @@
+"""Fleet-health machinery: heartbeats, straggler detection, failure policy.
+
+On a real fleet these hooks attach to the cluster scheduler; here they are
+fully implemented and unit-tested against simulated clocks/step-times, and
+``elastic.remesh_plan`` is exercised by tests that actually rebuild meshes
+at a different host-device count and restore resharded checkpoints."""
+from __future__ import annotations
+
+import dataclasses
+import math
+import time
+from collections import deque
+from typing import Callable, Dict, List, Optional, Sequence
+
+
+@dataclasses.dataclass
+class HeartbeatMonitor:
+    """Tracks last-seen times per host; flags dead hosts."""
+    timeout_s: float = 60.0
+    clock: Callable[[], float] = time.monotonic
+    _last: Dict[str, float] = dataclasses.field(default_factory=dict)
+
+    def beat(self, host: str):
+        self._last[host] = self.clock()
+
+    def dead_hosts(self) -> List[str]:
+        now = self.clock()
+        return sorted(h for h, t in self._last.items()
+                      if now - t > self.timeout_s)
+
+    def alive_hosts(self) -> List[str]:
+        dead = set(self.dead_hosts())
+        return sorted(h for h in self._last if h not in dead)
+
+
+@dataclasses.dataclass
+class StragglerDetector:
+    """Rolling per-host step-time stats; flags hosts slower than
+    ``threshold`` x the fleet median (the standard mitigation at scale is
+    to hot-swap the host or drop it at the next elastic boundary)."""
+    window: int = 32
+    threshold: float = 1.5
+    _times: Dict[str, deque] = dataclasses.field(default_factory=dict)
+
+    def record(self, host: str, step_time_s: float):
+        self._times.setdefault(
+            host, deque(maxlen=self.window)).append(step_time_s)
+
+    def _median(self, xs: Sequence[float]) -> float:
+        s = sorted(xs)
+        n = len(s)
+        mid = n // 2
+        return s[mid] if n % 2 else 0.5 * (s[mid - 1] + s[mid])
+
+    def host_medians(self) -> Dict[str, float]:
+        return {h: self._median(ts) for h, ts in self._times.items() if ts}
+
+    def stragglers(self) -> List[str]:
+        med = self.host_medians()
+        if len(med) < 2:
+            return []
+        fleet = self._median(list(med.values()))
+        return sorted(h for h, m in med.items()
+                      if m > self.threshold * fleet)
+
+
+@dataclasses.dataclass(frozen=True)
+class FailureEvent:
+    kind: str          # 'dead' | 'straggler'
+    hosts: tuple
+    step: int
+
+
+class FailurePolicy:
+    """Decides when to trigger an elastic re-mesh.
+
+    dead host      -> immediate remesh from last checkpoint
+    stragglers     -> remesh at the next checkpoint boundary if persistent
+    """
+
+    def __init__(self, monitor: HeartbeatMonitor,
+                 detector: StragglerDetector,
+                 persistence_steps: int = 100):
+        self.monitor = monitor
+        self.detector = detector
+        self.persistence = persistence_steps
+        self._straggler_since: Dict[str, int] = {}
+
+    def poll(self, step: int) -> Optional[FailureEvent]:
+        dead = self.monitor.dead_hosts()
+        if dead:
+            return FailureEvent("dead", tuple(dead), step)
+        current = set(self.detector.stragglers())
+        for h in list(self._straggler_since):
+            if h not in current:
+                del self._straggler_since[h]
+        for h in current:
+            self._straggler_since.setdefault(h, step)
+        persistent = tuple(
+            h for h, s0 in self._straggler_since.items()
+            if step - s0 >= self.persistence)
+        if persistent:
+            return FailureEvent("straggler", persistent, step)
+        return None

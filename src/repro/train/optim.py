@@ -1,0 +1,91 @@
+"""Optimizers, from scratch (no optax in the image).
+
+Adam/AdamW over arbitrary pytrees. Optimizer state mirrors the param tree,
+so parameter PartitionSpecs apply verbatim to both moments — optimizer
+state is ZeRO-sharded exactly like the weights.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+class AdamState(NamedTuple):
+    step: jnp.ndarray      # ()
+    mu: Any                # first moment, like params
+    nu: Any                # second moment, like params
+
+
+@dataclasses.dataclass(frozen=True)
+class AdamConfig:
+    lr: float = 1e-2                 # instant-NGP uses 1e-2 for fields
+    b1: float = 0.9
+    b2: float = 0.99                 # instant-NGP: 0.99
+    eps: float = 1e-10               # instant-NGP: 1e-10 (LMs use 1e-8)
+    weight_decay: float = 0.0
+    grad_clip: Optional[float] = None
+    lr_warmup_steps: int = 0
+    lr_decay_steps: int = 0          # cosine decay horizon; 0 = constant
+
+
+def adam_init(params) -> AdamState:
+    zeros = lambda p: jnp.zeros_like(p)
+    return AdamState(step=jnp.zeros((), jnp.int32),
+                     mu=jax.tree.map(zeros, params),
+                     nu=jax.tree.map(zeros, params))
+
+
+def _schedule(cfg: AdamConfig, step):
+    lr = jnp.asarray(cfg.lr, jnp.float32)
+    if cfg.lr_warmup_steps > 0:
+        lr = lr * jnp.minimum(1.0, (step + 1) / cfg.lr_warmup_steps)
+    if cfg.lr_decay_steps > 0:
+        frac = jnp.clip(step / cfg.lr_decay_steps, 0.0, 1.0)
+        lr = lr * 0.5 * (1.0 + jnp.cos(jnp.pi * frac))
+    return lr
+
+
+def global_norm(tree) -> jnp.ndarray:
+    return jnp.sqrt(sum(
+        jnp.sum(jnp.square(l.astype(jnp.float32)))
+        for l in jax.tree.leaves(tree)))
+
+
+def clip_by_global_norm(grads, max_norm: float):
+    norm = global_norm(grads)
+    scale = jnp.minimum(1.0, max_norm / (norm + 1e-9))
+    return jax.tree.map(lambda g: g * scale, grads), norm
+
+
+def adam_update(grads, state: AdamState, params, cfg: AdamConfig
+                ) -> Tuple[Any, AdamState, Dict[str, jnp.ndarray]]:
+    metrics = {}
+    if cfg.grad_clip is not None:
+        grads, gnorm = clip_by_global_norm(grads, cfg.grad_clip)
+        metrics["grad_norm"] = gnorm
+    step = state.step + 1
+    lr = _schedule(cfg, step)
+    b1, b2 = cfg.b1, cfg.b2
+    mu = jax.tree.map(lambda m, g: b1 * m + (1 - b1) * g, state.mu, grads)
+    nu = jax.tree.map(lambda v, g: b2 * v + (1 - b2) * jnp.square(g),
+                      state.nu, grads)
+    bc1 = 1 - b1 ** step.astype(jnp.float32)
+    bc2 = 1 - b2 ** step.astype(jnp.float32)
+
+    def upd(p, m, v):
+        u = (m / bc1) / (jnp.sqrt(v / bc2) + cfg.eps)
+        if cfg.weight_decay:
+            u = u + cfg.weight_decay * p
+        return (p - lr * u).astype(p.dtype)
+
+    new_params = jax.tree.map(upd, params, mu, nu)
+    metrics["lr"] = lr
+    return new_params, AdamState(step=step, mu=mu, nu=nu), metrics
+
+
+def optimizer_spec(param_specs) -> Any:
+    """Logical specs for AdamState given param logical specs."""
+    return AdamState(step=(), mu=param_specs, nu=param_specs)

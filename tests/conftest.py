@@ -1,0 +1,26 @@
+"""Shared fixtures. NOTE: no XLA_FLAGS here — smoke tests and benches see
+the real single CPU device; multi-device tests spawn subprocesses."""
+import dataclasses
+
+import jax
+import pytest
+
+
+@pytest.fixture(scope="session")
+def rng():
+    return jax.random.PRNGKey(0)
+
+
+def small_grid(cfg_grid, log2_T=12):
+    return dataclasses.replace(cfg_grid, log2_table_size=log2_T)
+
+
+def small_field_config(app: str, encoding: str, log2_T: int = 12):
+    from repro.core import fields
+    cfg = fields.make_field_config(app, encoding)
+    g = dataclasses.replace(cfg.grid, log2_table_size=log2_T)
+    if cfg.app == "nerf":
+        return dataclasses.replace(cfg, grid=g)
+    return dataclasses.replace(
+        cfg, grid=g,
+        mlp=dataclasses.replace(cfg.mlp, in_dim=g.out_dim))

@@ -1,0 +1,86 @@
+"""Checkpoint store: roundtrip, integrity, atomicity, async, GC."""
+import json
+import zlib
+from pathlib import Path
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.checkpoint import store
+
+
+def _tree(key=0):
+    k = jax.random.PRNGKey(key)
+    return {"a": jax.random.normal(k, (8, 16)),
+            "nested": {"b": jnp.arange(12, dtype=jnp.int32),
+                       "c": jnp.float32(3.5)}}
+
+
+def test_roundtrip(tmp_path):
+    t = _tree()
+    store.save(t, 7, tmp_path)
+    sds = jax.eval_shape(lambda x: x, t)
+    got = store.restore(tmp_path, sds)
+    for a, b in zip(jax.tree.leaves(t), jax.tree.leaves(got)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_latest_step_and_gc(tmp_path):
+    t = _tree()
+    for s in (1, 5, 12, 20):
+        store.save(t, s, tmp_path)
+    assert store.latest_step(tmp_path) == 20
+    store.gc_old(tmp_path, keep=2)
+    steps = sorted(int(p.name.split("_")[1])
+                   for p in Path(tmp_path).glob("step_*"))
+    assert steps == [12, 20]
+
+
+def test_crc_detects_corruption(tmp_path):
+    t = _tree()
+    d = store.save(t, 3, tmp_path)
+    # flip a byte in the first leaf
+    f = next(d.glob("leaf_*.npy"))
+    raw = bytearray(f.read_bytes())
+    raw[-1] ^= 0xFF
+    f.write_bytes(bytes(raw))
+    sds = jax.eval_shape(lambda x: x, t)
+    with pytest.raises(IOError):
+        store.restore(tmp_path, sds, verify=True)
+
+
+def test_structure_mismatch_rejected(tmp_path):
+    store.save(_tree(), 1, tmp_path)
+    bad = {"a": jnp.zeros((8, 16))}       # missing leaves
+    with pytest.raises(ValueError):
+        store.restore(tmp_path, jax.eval_shape(lambda x: x, bad))
+
+
+def test_async_checkpointer(tmp_path):
+    ck = store.AsyncCheckpointer(tmp_path, keep=2)
+    t = _tree()
+    for s in (0, 10, 20):
+        ck.save(t, s)
+    ck.wait()
+    assert store.latest_step(tmp_path) == 20
+    steps = sorted(int(p.name.split("_")[1])
+                   for p in Path(tmp_path).glob("step_*"))
+    assert len(steps) == 2
+
+
+def test_atomic_no_partial_dirs(tmp_path):
+    """tmp dirs never count as checkpoints."""
+    t = _tree()
+    store.save(t, 2, tmp_path)
+    (Path(tmp_path) / ".tmp_step_9_x").mkdir()
+    assert store.latest_step(tmp_path) == 2
+
+
+def test_restore_dtype_cast(tmp_path):
+    t = {"w": jnp.ones((4, 4), jnp.float32)}
+    store.save(t, 0, tmp_path)
+    target = {"w": jax.ShapeDtypeStruct((4, 4), jnp.bfloat16)}
+    got = store.restore(tmp_path, target)
+    assert got["w"].dtype == jnp.bfloat16

@@ -1,0 +1,71 @@
+"""Gradient compression: error-feedback invariants + quantization bounds."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.train import compression
+
+
+def test_topk_keeps_largest():
+    g = jnp.array([0.1, -5.0, 0.3, 4.0, -0.2, 0.05, 2.0, -1.0])
+    kept, err = compression.compress_topk(g, jnp.zeros_like(g), 0.25)
+    nz = np.nonzero(np.asarray(kept))[0]
+    assert set(nz) == {1, 3}            # |−5|, |4| are the top 25%
+    np.testing.assert_allclose(np.asarray(kept + err), np.asarray(g),
+                               atol=1e-7)
+
+
+def test_topk_error_feedback_invariant():
+    """kept + new_err == grad + old_err (nothing is ever lost)."""
+    g = jax.random.normal(jax.random.PRNGKey(0), (256,))
+    e = jax.random.normal(jax.random.PRNGKey(1), (256,)) * 0.1
+    kept, new_e = compression.compress_topk(g, e, 0.05)
+    np.testing.assert_allclose(np.asarray(kept + new_e),
+                               np.asarray(g + e), atol=1e-6)
+
+
+@settings(max_examples=25, deadline=None)
+@given(st.integers(0, 10_000))
+def test_int8_quantization_bounded_error(seed):
+    g = jax.random.normal(jax.random.PRNGKey(seed), (128,))
+    deq, err = compression.compress_int8(g, jnp.zeros_like(g))
+    scale = float(jnp.max(jnp.abs(g))) / 127.0
+    assert float(jnp.max(jnp.abs(err))) <= scale * 0.5 + 1e-6
+    np.testing.assert_allclose(np.asarray(deq + err), np.asarray(g),
+                               atol=1e-6)
+
+
+def test_error_feedback_conserves_total_mass():
+    """Over any horizon: sum(sent) + residual efb == n_steps * g exactly
+    (error feedback loses nothing, only delays)."""
+    g = jnp.array([1.0, 0.1, 0.01, 0.001])
+    efb = jnp.zeros_like(g)
+    sent = jnp.zeros_like(g)
+    n = 200
+    for _ in range(n):
+        kept, efb = compression.compress_topk(g, efb, 0.25)
+        sent = sent + kept
+    np.testing.assert_allclose(np.asarray(sent + efb), np.asarray(g) * n,
+                               rtol=1e-5)
+    # the dominant coordinate is transmitted at full rate
+    np.testing.assert_allclose(float(sent[0]) / n, 1.0, rtol=0.05)
+
+
+def test_apply_inline_tree():
+    grads = {"w": jax.random.normal(jax.random.PRNGKey(0), (32, 8)),
+             "b": jax.random.normal(jax.random.PRNGKey(1), (8,))}
+
+    class TC:
+        compression = "topk"
+        compression_topk = 0.1
+
+    new_grads, state = compression.apply_inline(grads, {}, TC)
+    assert set(state["efb"]) == {"w", "b"}
+    for k in grads:
+        np.testing.assert_allclose(
+            np.asarray(new_grads[k] + state["efb"][k]),
+            np.asarray(grads[k]), atol=1e-6)
+    # second step reuses the buffer
+    new2, state2 = compression.apply_inline(grads, state, TC)
+    assert float(jnp.abs(state2["efb"]["w"]).sum()) >= 0.0

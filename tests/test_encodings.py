@@ -1,0 +1,130 @@
+"""Unit + property tests for the input-encoding layer (paper §II-A)."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import encoding as enc
+
+
+def test_hash_index_range_and_mask_equivalence():
+    """Eq. 1: power-of-two T means mod == AND-mask (the NGPC shift trick)."""
+    coords = jax.random.randint(jax.random.PRNGKey(0), (512, 3), 0, 10000)
+    for log2_T in (4, 14, 19):
+        T = 1 << log2_T
+        idx = enc.hash_index(coords, T)
+        assert int(idx.min()) >= 0 and int(idx.max()) < T
+        # reference modulo implementation
+        acc = coords[:, 0].astype(jnp.uint32) * np.uint32(enc.HASH_PRIMES[0])
+        for i in (1, 2):
+            acc = acc ^ (coords[:, i].astype(jnp.uint32)
+                         * np.uint32(enc.HASH_PRIMES[i]))
+        np.testing.assert_array_equal(
+            np.asarray(idx), np.asarray((acc % T).astype(jnp.int32)))
+
+
+def test_dense_index_bijective_on_small_grid():
+    res = 7
+    cfg = enc.GridConfig(dim=3, log2_table_size=10)
+    coords = jnp.stack(jnp.meshgrid(*[jnp.arange(res + 1)] * 3,
+                                    indexing="ij"), -1).reshape(-1, 3)
+    idx = enc.dense_index(coords, res, cfg.table_size)
+    assert len(np.unique(np.asarray(idx))) == (res + 1) ** 3
+
+
+def test_level_resolution_growth():
+    cfg = enc.hashgrid_config()
+    res = [cfg.level_resolution(l) for l in range(cfg.n_levels)]
+    assert res[0] == 16 and all(b > a for a, b in zip(res, res[1:]))
+    # paper: coarse levels dense, fine levels hashed
+    hashed = [cfg.level_is_hashed(l) for l in range(cfg.n_levels)]
+    assert not hashed[0] and hashed[-1]
+    assert hashed == sorted(hashed)   # monotone switch
+
+
+def test_table_param_bound():
+    cfg = enc.hashgrid_config()
+    assert cfg.params_bound() == 2 ** 19 * 16 * 2   # T*L*F (paper §II-A)
+
+
+@pytest.mark.parametrize("kind,dim", [("hash", 3), ("dense", 3),
+                                      ("tiled", 2)])
+def test_encoding_shapes_and_finiteness(kind, dim):
+    mk = {"hash": enc.hashgrid_config, "dense": enc.densegrid_config,
+          "tiled": enc.tiledgrid_config}[kind]
+    cfg = dataclasses.replace(mk(dim=dim), log2_table_size=10)
+    tables = enc.init_grid(jax.random.PRNGKey(0), cfg).value
+    pts = jax.random.uniform(jax.random.PRNGKey(1), (64, dim))
+    out = enc.grid_encode(pts, tables, cfg)
+    assert out.shape == (64, cfg.out_dim)
+    assert bool(jnp.isfinite(out).all())
+
+
+@settings(max_examples=20, deadline=None)
+@given(st.floats(0.01, 0.99), st.floats(0.01, 0.99), st.floats(0.01, 0.99))
+def test_encoding_is_continuous(x, y, z):
+    """d-linear interpolation: a tiny step moves the encoding by O(step)."""
+    cfg = dataclasses.replace(enc.hashgrid_config(), log2_table_size=10,
+                              n_levels=4)
+    tables = enc.init_grid(jax.random.PRNGKey(0), cfg).value * 1e4
+    p = jnp.array([[x, y, z]], jnp.float32)
+    eps = 1e-6
+    a = enc.grid_encode(p, tables, cfg)
+    b = enc.grid_encode(p + eps, tables, cfg)
+    # lipschitz: |f(p+e)-f(p)| <= max_res * e * d * max|feat| * margin
+    bound = cfg.level_resolution(cfg.n_levels - 1) * eps * 3 * \
+        float(jnp.abs(tables).max()) * 8
+    assert float(jnp.abs(a - b).max()) <= bound + 1e-5
+
+
+@settings(max_examples=10, deadline=None)
+@given(st.integers(0, 2 ** 31 - 1))
+def test_encoding_batch_equivariance(seed):
+    """Encoding is a per-point map: permuting inputs permutes outputs."""
+    cfg = dataclasses.replace(enc.hashgrid_config(), log2_table_size=8,
+                              n_levels=3)
+    tables = enc.init_grid(jax.random.PRNGKey(0), cfg).value
+    pts = jax.random.uniform(jax.random.PRNGKey(seed % 2**31), (32, 3))
+    perm = jax.random.permutation(jax.random.PRNGKey(1), 32)
+    a = enc.grid_encode(pts, tables, cfg)[perm]
+    b = enc.grid_encode(pts[perm], tables, cfg)
+    np.testing.assert_allclose(np.asarray(a), np.asarray(b), atol=1e-6)
+
+
+def test_sh_encoding_degree4():
+    d = jax.random.normal(jax.random.PRNGKey(0), (128, 3))
+    d = d / jnp.linalg.norm(d, axis=-1, keepdims=True)
+    sh = enc.sh_encode(d)
+    assert sh.shape == (128, 16)
+    # band 0 is constant
+    np.testing.assert_allclose(np.asarray(sh[:, 0]), 0.282095, atol=1e-5)
+
+
+def test_frequency_encoding():
+    x = jnp.zeros((4, 3))
+    out = enc.frequency_encode(x, n_freqs=6)
+    assert out.shape == (4, 3 * 12)
+    # layout: per input dim, [sin(6 freqs) | cos(6 freqs)]
+    blocks = np.asarray(out).reshape(4, 3, 2, 6)
+    np.testing.assert_allclose(blocks[:, :, 0], 0.0, atol=1e-6)  # sin(0)
+    np.testing.assert_allclose(blocks[:, :, 1], 1.0, atol=1e-6)  # cos(0)
+
+
+def test_grad_sparsity_of_hash_tables():
+    """Only touched rows receive gradient (basis for sparse-grad
+    compression in multi-host field training)."""
+    cfg = dataclasses.replace(enc.hashgrid_config(), log2_table_size=12,
+                              n_levels=2)
+    tables = enc.init_grid(jax.random.PRNGKey(0), cfg).value
+
+    def loss(t):
+        pts = jax.random.uniform(jax.random.PRNGKey(1), (8, 3))
+        return jnp.sum(enc.grid_encode(pts, t, cfg) ** 2)
+
+    g = jax.grad(loss)(tables)
+    touched = jnp.any(g != 0, axis=-1)
+    frac = float(jnp.mean(touched))
+    assert 0 < frac < 0.1   # 8 points touch <= 8*8 rows of 4096

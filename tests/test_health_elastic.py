@@ -1,0 +1,90 @@
+"""Fleet health + elastic re-mesh planning (hypothesis properties)."""
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.runtime.elastic import MeshPlan, remesh_plan
+from repro.runtime.health import (FailureEvent, FailurePolicy,
+                                  HeartbeatMonitor, StragglerDetector)
+
+
+class FakeClock:
+    def __init__(self):
+        self.t = 0.0
+
+    def __call__(self):
+        return self.t
+
+
+def test_heartbeat_detects_dead_host():
+    clk = FakeClock()
+    mon = HeartbeatMonitor(timeout_s=10.0, clock=clk)
+    for h in ("h0", "h1", "h2"):
+        mon.beat(h)
+    clk.t = 5.0
+    mon.beat("h0")
+    mon.beat("h1")
+    clk.t = 12.0
+    assert mon.dead_hosts() == ["h2"]
+    assert mon.alive_hosts() == ["h0", "h1"]
+
+
+def test_straggler_detection():
+    det = StragglerDetector(window=8, threshold=1.5)
+    for step in range(8):
+        for h in range(4):
+            det.record(f"h{h}", 1.0 if h != 3 else 2.5)
+    assert det.stragglers() == ["h3"]
+
+
+def test_failure_policy_dead_beats_straggler():
+    clk = FakeClock()
+    mon = HeartbeatMonitor(timeout_s=10.0, clock=clk)
+    det = StragglerDetector()
+    pol = FailurePolicy(mon, det, persistence_steps=5)
+    mon.beat("h0")
+    mon.beat("h1")
+    clk.t = 20.0
+    mon.beat("h0")
+    ev = pol.poll(step=0)
+    assert ev is not None and ev.kind == "dead" and ev.hosts == ("h1",)
+
+
+def test_failure_policy_persistent_straggler():
+    mon = HeartbeatMonitor(timeout_s=1e9)
+    det = StragglerDetector(window=4)
+    pol = FailurePolicy(mon, det, persistence_steps=10)
+    for h in ("h0", "h1"):
+        mon.beat(h)
+    for step in range(30):
+        det.record("h0", 1.0)
+        det.record("h1", 9.0)
+        ev = pol.poll(step)
+        if step < 10:
+            assert ev is None
+    assert ev is not None and ev.kind == "straggler" \
+        and ev.hosts == ("h1",)
+
+
+def test_remesh_plan_prefers_same_tp():
+    plan = remesh_plan(surviving_chips=192, old_data=16, old_model=16)
+    assert plan.model == 16 and plan.data == 12
+    assert plan.microbatch_multiplier == 2   # ceil(16/12)
+
+
+def test_remesh_plan_shrinks_tp_when_needed():
+    plan = remesh_plan(surviving_chips=24, old_data=4, old_model=16)
+    assert plan.model in (8, 4, 2, 1) and 16 % plan.model == 0
+    assert plan.chips <= 24
+
+
+@settings(max_examples=60, deadline=None)
+@given(st.integers(1, 4096), st.sampled_from([1, 2, 4, 8, 16]),
+       st.sampled_from([1, 2, 4, 8, 16]))
+def test_remesh_plan_properties(survivors, old_data, old_model):
+    plan = remesh_plan(survivors, old_data, old_model)
+    assert plan.chips <= survivors                 # never oversubscribe
+    assert old_model % plan.model == 0             # weight divisibility
+    assert plan.data * plan.model == plan.chips
+    assert plan.microbatch_multiplier >= 1
+    # global batch preserved: new data parallelism x multiplier >= old
+    assert plan.data * plan.microbatch_multiplier >= old_data

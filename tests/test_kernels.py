@@ -1,0 +1,162 @@
+"""Per-kernel shape/dtype sweeps, asserting allclose against the pure-jnp
+ref.py oracles (interpret=True executes the Pallas body on CPU)."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.common.param import unbox
+from repro.core import encoding as enc, render
+from repro.core.mlp import MLPConfig, init_mlp
+from repro.kernels.fused_field import ops as ff_ops, ref as ff_ref
+from repro.kernels.fused_mlp import ops as mlp_ops, ref as mlp_ref
+from repro.kernels.hashgrid import ops as hg_ops, ref as hg_ref
+from repro.kernels.ray_march import ops as rm_ops
+
+
+# ------------------------------------------------------------- hashgrid
+@pytest.mark.parametrize("kind,dim", [("hash", 3), ("hash", 2),
+                                      ("dense", 3), ("tiled", 2),
+                                      ("tiled", 3)])
+@pytest.mark.parametrize("n", [64, 1000, 4096])
+def test_hashgrid_vs_ref(kind, dim, n):
+    mk = {"hash": enc.hashgrid_config, "dense": enc.densegrid_config,
+          "tiled": enc.tiledgrid_config}[kind]
+    cfg = dataclasses.replace(mk(dim=dim), log2_table_size=11)
+    tables = enc.init_grid(jax.random.PRNGKey(0), cfg).value
+    pts = jax.random.uniform(jax.random.PRNGKey(1), (n, dim))
+    out_k = hg_ops.encode(pts, tables, cfg, block_b=256)
+    out_r = hg_ref.encode_ref(pts, tables, cfg)
+    np.testing.assert_allclose(np.asarray(out_k), np.asarray(out_r),
+                               atol=1e-5, rtol=1e-5)
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_hashgrid_table_dtypes(dtype):
+    cfg = dataclasses.replace(enc.hashgrid_config(), log2_table_size=10,
+                              n_levels=4)
+    tables = enc.init_grid(jax.random.PRNGKey(0), cfg, dtype=dtype).value
+    pts = jax.random.uniform(jax.random.PRNGKey(1), (256, 3))
+    out_k = hg_ops.encode(pts, tables, cfg, block_b=128)
+    out_r = hg_ref.encode_ref(pts, tables, cfg)
+    tol = 1e-5 if dtype == jnp.float32 else 2e-2
+    np.testing.assert_allclose(np.asarray(out_k), np.asarray(out_r),
+                               atol=tol, rtol=tol)
+
+
+def test_hashgrid_edge_coordinates():
+    """0.0 and 1.0 inputs must not index out of table bounds."""
+    cfg = dataclasses.replace(enc.hashgrid_config(), log2_table_size=10,
+                              n_levels=4)
+    tables = enc.init_grid(jax.random.PRNGKey(0), cfg).value
+    pts = jnp.array([[0.0, 0.0, 0.0], [1.0, 1.0, 1.0], [0.0, 1.0, 0.5]])
+    out_k = hg_ops.encode(pts, tables, cfg, block_b=8)
+    out_r = hg_ref.encode_ref(pts, tables, cfg)
+    np.testing.assert_allclose(np.asarray(out_k), np.asarray(out_r),
+                               atol=1e-6)
+
+
+# ------------------------------------------------------------- fused MLP
+@pytest.mark.parametrize("in_dim,n_hidden,out_dim",
+                         [(32, 3, 16), (32, 4, 3), (16, 1, 1),
+                          (64, 2, 4), (2, 4, 3)])
+def test_fused_mlp_vs_ref(in_dim, n_hidden, out_dim):
+    cfg = MLPConfig(in_dim=in_dim, n_hidden=n_hidden, out_dim=out_dim)
+    params, _ = unbox(init_mlp(jax.random.PRNGKey(0), cfg))
+    x = jax.random.normal(jax.random.PRNGKey(1), (300, in_dim))
+    out_k = mlp_ops.mlp(params, x, cfg, block_b=128)
+    out_r = mlp_ref.mlp_ref(params, x, cfg)
+    np.testing.assert_allclose(np.asarray(out_k), np.asarray(out_r),
+                               atol=1e-4, rtol=1e-4)
+
+
+@pytest.mark.parametrize("n", [8, 100, 512, 1000])
+def test_fused_mlp_batch_padding(n):
+    cfg = MLPConfig(in_dim=32, n_hidden=3, out_dim=16)
+    params, _ = unbox(init_mlp(jax.random.PRNGKey(0), cfg))
+    x = jax.random.normal(jax.random.PRNGKey(1), (n, 32))
+    out_k = mlp_ops.mlp(params, x, cfg, block_b=256)
+    assert out_k.shape == (n, 16)
+    np.testing.assert_allclose(np.asarray(out_k),
+                               np.asarray(mlp_ref.mlp_ref(params, x, cfg)),
+                               atol=1e-4, rtol=1e-4)
+
+
+def test_fused_mlp_bf16_weights():
+    cfg = MLPConfig(in_dim=32, n_hidden=2, out_dim=8)
+    params, _ = unbox(init_mlp(jax.random.PRNGKey(0), cfg,
+                               dtype=jnp.bfloat16))
+    x = jax.random.normal(jax.random.PRNGKey(1), (128, 32))
+    out_k = mlp_ops.mlp(params, x, cfg, block_b=64)
+    out_r = mlp_ref.mlp_ref(params, x, cfg)
+    np.testing.assert_allclose(np.asarray(out_k), np.asarray(out_r),
+                               atol=3e-2, rtol=3e-2)
+
+
+# ----------------------------------------------------------- fused field
+@pytest.mark.parametrize("kind,n_hidden,out_dim",
+                         [("hash", 3, 16), ("dense", 4, 4), ("tiled", 4, 1)])
+def test_fused_field_vs_ref(kind, n_hidden, out_dim):
+    mk = {"hash": enc.hashgrid_config, "dense": enc.densegrid_config,
+          "tiled": enc.tiledgrid_config}[kind]
+    gcfg = dataclasses.replace(mk(dim=3), log2_table_size=11)
+    mcfg = MLPConfig(in_dim=gcfg.out_dim, n_hidden=n_hidden,
+                     out_dim=out_dim)
+    tables = enc.init_grid(jax.random.PRNGKey(0), gcfg).value
+    params, _ = unbox(init_mlp(jax.random.PRNGKey(1), mcfg))
+    pts = jax.random.uniform(jax.random.PRNGKey(2), (500, 3))
+    out_k = ff_ops.field(pts, tables, params, gcfg, mcfg, block_b=128)
+    out_r = ff_ref.field_ref(pts, tables, params, gcfg, mcfg)
+    np.testing.assert_allclose(np.asarray(out_k), np.asarray(out_r),
+                               atol=1e-4, rtol=1e-4)
+
+
+def test_fused_field_matches_unfused_apply():
+    """The NFP fusion is bit-compatible with the two-kernel GPU path."""
+    from repro.core import fields
+    from tests.conftest import small_field_config
+    for app in ("gia", "nsdf", "nvr", "nerf"):
+        cfg = small_field_config(app, "hash")
+        params, _ = unbox(fields.init_field(jax.random.PRNGKey(3), cfg))
+        pts = jax.random.uniform(jax.random.PRNGKey(4),
+                                 (200, cfg.grid.dim))
+        dirs = None
+        if app in ("nerf", "nvr"):
+            d = jax.random.normal(jax.random.PRNGKey(5), (200, 3))
+            dirs = d / jnp.linalg.norm(d, axis=-1, keepdims=True)
+        fused = fields.apply_field(params, cfg, pts, dirs, use_pallas=True)
+        xla = fields.apply_field(params, cfg, pts, dirs, use_pallas=False)
+        np.testing.assert_allclose(np.asarray(fused), np.asarray(xla),
+                                   atol=1e-4, rtol=1e-3)
+
+
+# ------------------------------------------------------------- ray march
+@pytest.mark.parametrize("r,s", [(64, 16), (500, 32), (256, 192)])
+def test_ray_march_vs_ref(r, s):
+    rgb = jax.random.uniform(jax.random.PRNGKey(0), (r, s, 3))
+    sigma = jax.random.uniform(jax.random.PRNGKey(1), (r, s)) * 8
+    dts = jnp.full((r, s), 0.07)
+    pk, ok = rm_ops.composite(rgb, sigma, dts, block_r=128)
+    pr, orr = render.composite(rgb, sigma, dts)
+    np.testing.assert_allclose(np.asarray(pk), np.asarray(pr), atol=1e-5,
+                               rtol=1e-4)
+    np.testing.assert_allclose(np.asarray(ok), np.asarray(orr), atol=1e-5,
+                               rtol=1e-4)
+
+
+def test_ray_march_opaque_and_empty():
+    """Opaque volume -> first sample's color; empty -> zeros."""
+    r, s = 32, 16
+    rgb = jnp.broadcast_to(jnp.array([1.0, 0.5, 0.25]), (r, s, 3))
+    sigma_opaque = jnp.full((r, s), 1e4)
+    sigma_empty = jnp.zeros((r, s))
+    dts = jnp.full((r, s), 0.1)
+    pk, ok = rm_ops.composite(rgb, sigma_opaque, dts, block_r=32)
+    np.testing.assert_allclose(np.asarray(pk),
+                               np.asarray(rgb[:, 0]), atol=1e-3)
+    np.testing.assert_allclose(np.asarray(ok), 1.0, atol=1e-3)
+    pk, ok = rm_ops.composite(rgb, sigma_empty, dts, block_r=32)
+    np.testing.assert_allclose(np.asarray(pk), 0.0, atol=1e-6)
+    np.testing.assert_allclose(np.asarray(ok), 0.0, atol=1e-6)

@@ -1,0 +1,325 @@
+"""Per-arch smoke tests (assigned requirement: reduced config, one
+forward/train step on CPU, output shapes + no NaNs) plus deeper model
+semantics: decode==forward, SSD chunked==recurrent, SWA, M-RoPE, MoE."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.common.param import unbox
+from repro.configs.registry import get_config, list_archs, reduced_config
+from repro.configs.shapes import SHAPES, shape_applicable
+from repro.models import attention, encdec, lm, moe as moe_lib, ssm
+from repro.models.config import ModelConfig, SSMConfig
+from repro.train import optim
+
+
+def _nodrop(cfg, f32: bool = False):
+    if cfg.moe is not None:
+        cfg = dataclasses.replace(
+            cfg, moe=dataclasses.replace(cfg.moe, capacity_factor=16.0))
+    if f32:   # parity tests run in f32 (bf16 noise accumulates over depth)
+        cfg = dataclasses.replace(cfg, act_dtype="float32")
+    return cfg
+
+
+@pytest.mark.parametrize("arch", list_archs())
+def test_arch_smoke_forward_and_train_step(arch):
+    """One fwd + one train step per reduced arch; shapes + finite."""
+    cfg = reduced_config(arch)
+    key = jax.random.PRNGKey(0)
+    B, S = 2, 32
+    toks = jax.random.randint(key, (B, S), 0, cfg.vocab_size)
+    if cfg.is_encdec:
+        params, _ = unbox(encdec.init_encdec(key, cfg))
+        batch = {"enc_embeddings": jax.random.normal(
+            key, (B, S, cfg.d_model), cfg.adtype), "tokens": toks}
+        loss_fn = lambda p, b: encdec.loss_fn(p, cfg, b)
+        logits = encdec.decode_train(
+            params, cfg, toks, encdec.encode(
+                params, cfg, batch["enc_embeddings"]))
+    else:
+        params, _ = unbox(lm.init_lm(key, cfg))
+        batch = {"tokens": toks}
+        if cfg.frontend == "vision":
+            batch = {"embeddings": jax.random.normal(
+                key, (B, S, cfg.d_model), cfg.adtype),
+                "labels": toks,
+                "positions": jnp.broadcast_to(
+                    jnp.arange(S)[None, None], (3, B, S)).astype(jnp.int32)}
+        loss_fn = lambda p, b: lm.loss_fn(p, cfg, b)
+        logits, _ = lm.forward(params, cfg, batch)
+    assert logits.shape == (B, S, cfg.vocab_size)
+    assert bool(jnp.isfinite(logits.astype(jnp.float32)).all()), arch
+
+    # one optimizer step moves the loss
+    opt = optim.adam_init(params)
+    (l0, _), grads = jax.value_and_grad(loss_fn, has_aux=True)(params,
+                                                               batch)
+    new_params, opt, _ = optim.adam_update(
+        grads, opt, params, optim.AdamConfig(lr=1e-3, eps=1e-8))
+    l1, _ = loss_fn(new_params, batch)
+    assert bool(jnp.isfinite(l0)) and bool(jnp.isfinite(l1))
+    assert float(l1) < float(l0)   # one step on same batch must improve
+
+
+@pytest.mark.parametrize("arch", ["yi-6b", "h2o-danube-1.8b",
+                                  "qwen3-moe-30b-a3b", "jamba-v0.1-52b",
+                                  "mamba2-2.7b", "whisper-base",
+                                  "qwen2-vl-72b"])
+def test_prefill_decode_matches_forward(arch):
+    cfg = _nodrop(reduced_config(arch), f32=True)
+    key = jax.random.PRNGKey(0)
+    B, S, cap = 2, 24, 32
+    toks = jax.random.randint(jax.random.PRNGKey(1), (B, S), 0,
+                              cfg.vocab_size)
+    if cfg.is_encdec:
+        params, _ = unbox(encdec.init_encdec(key, cfg))
+        frames = jax.random.normal(key, (B, 16, cfg.d_model), cfg.adtype)
+        enc_out = encdec.encode(params, cfg, frames)
+        full = encdec.decode_train(params, cfg, toks, enc_out)
+        cache = encdec.init_dec_cache(cfg, B, cap, 16)
+        got, cache = encdec.prefill(
+            params, cfg, {"enc_embeddings": frames, "tokens": toks}, cache)
+    else:
+        params, _ = unbox(lm.init_lm(key, cfg))
+        full, _ = lm.forward(params, cfg, {"tokens": toks})
+        cache = lm.init_cache(cfg, B, cap)
+        got, cache = lm.prefill(params, cfg, {"tokens": toks}, cache)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(full[:, -1]),
+                               atol=2e-2, rtol=2e-2)
+
+
+def test_ssd_chunked_matches_recurrence():
+    """The SSD chunked form == the token-by-token recurrence."""
+    b, s, h, p, n = 2, 32, 4, 8, 16
+    key = jax.random.PRNGKey(0)
+    x = jax.random.normal(key, (b, s, h, p))
+    dt = jax.nn.softplus(jax.random.normal(jax.random.PRNGKey(1),
+                                           (b, s, h)))
+    A = -jnp.exp(jax.random.normal(jax.random.PRNGKey(2), (h,)) * 0.3)
+    B = jax.random.normal(jax.random.PRNGKey(3), (b, s, 1, n))
+    C = jax.random.normal(jax.random.PRNGKey(4), (b, s, 1, n))
+    y_chunk, state_chunk = ssm.ssd_chunked(x, dt, A, B, C, chunk=8)
+
+    # reference recurrence
+    state = jnp.zeros((b, h, p, n))
+    ys = []
+    for t in range(s):
+        decay = jnp.exp(dt[:, t] * A[None, :])            # (b, h)
+        Bt = jnp.repeat(B[:, t], h, axis=1)               # (b, h, n)
+        Ct = jnp.repeat(C[:, t], h, axis=1)
+        state = state * decay[:, :, None, None] + \
+            (dt[:, t][:, :, None] * x[:, t])[..., None] * Bt[:, :, None, :]
+        ys.append(jnp.einsum("bhpn,bhn->bhp", state, Ct))
+    y_ref = jnp.stack(ys, axis=1)
+    np.testing.assert_allclose(np.asarray(y_chunk), np.asarray(y_ref),
+                               atol=1e-3, rtol=1e-3)
+    np.testing.assert_allclose(np.asarray(state_chunk),
+                               np.asarray(state), atol=1e-3, rtol=1e-3)
+
+
+@pytest.mark.parametrize("chunk", [4, 8, 16, 32])
+def test_ssd_chunk_size_invariance(chunk):
+    b, s, h, p, n = 1, 32, 2, 4, 8
+    x = jax.random.normal(jax.random.PRNGKey(0), (b, s, h, p))
+    dt = jax.nn.softplus(jax.random.normal(jax.random.PRNGKey(1),
+                                           (b, s, h)))
+    A = -jnp.exp(jax.random.normal(jax.random.PRNGKey(2), (h,)) * 0.3)
+    B = jax.random.normal(jax.random.PRNGKey(3), (b, s, 1, n))
+    C = jax.random.normal(jax.random.PRNGKey(4), (b, s, 1, n))
+    y32, _ = ssm.ssd_chunked(x, dt, A, B, C, chunk=32)
+    yc, _ = ssm.ssd_chunked(x, dt, A, B, C, chunk=chunk)
+    np.testing.assert_allclose(np.asarray(yc), np.asarray(y32),
+                               atol=1e-3, rtol=1e-3)
+
+
+def test_swa_masks_old_tokens():
+    """With window W, attention at position i ignores keys <= i-W."""
+    cfg = dataclasses.replace(reduced_config("h2o-danube-1.8b"),
+                              swa_window=4, n_layers=2)
+    mask = attention.causal_mask(8, 8, window=4)[0]
+    for i in range(8):
+        for j in range(8):
+            expected = (j <= i) and (j > i - 4)
+            assert bool(mask[i, j]) == expected
+
+
+def test_swa_ring_cache_decode_matches_forward_window():
+    """Decode through the ring buffer == full forward with SWA mask."""
+    cfg = _nodrop(dataclasses.replace(reduced_config("h2o-danube-1.8b"),
+                                      swa_window=8), f32=True)
+    params, _ = unbox(lm.init_lm(jax.random.PRNGKey(0), cfg))
+    B, S = 1, 20
+    toks = jax.random.randint(jax.random.PRNGKey(1), (B, S), 0,
+                              cfg.vocab_size)
+    full, _ = lm.forward(params, cfg, {"tokens": toks})
+    cache = lm.init_cache(cfg, B, capacity=64)   # ring size = window = 8
+    got, cache = lm.prefill(params, cfg, {"tokens": toks[:, :-1]}, cache)
+    got2, _ = lm.decode_step(params, cfg, toks[:, -1:], jnp.int32(S - 1),
+                             cache)
+    np.testing.assert_allclose(np.asarray(got2), np.asarray(full[:, -1]),
+                               atol=2e-2, rtol=2e-2)
+
+
+def test_mrope_sections_differ_from_rope():
+    """t/h/w position streams produce different rotations when they
+    disagree (vision tokens) and reduce to 1-D RoPE when equal."""
+    from repro.models import layers
+    x = jax.random.normal(jax.random.PRNGKey(0), (1, 6, 2, 16))
+    pos1d = jnp.arange(6, dtype=jnp.int32)[None]
+    pos_eq = jnp.broadcast_to(pos1d[None], (3, 1, 6))
+    a = layers.apply_m_rope(x, pos_eq, 10000.0, (2, 3, 3))
+    b = layers.apply_rope(x, pos1d, 10000.0)
+    np.testing.assert_allclose(np.asarray(a), np.asarray(b), atol=1e-5)
+    pos_neq = pos_eq.at[1].set(pos_eq[1] * 3)
+    c = layers.apply_m_rope(x, pos_neq, 10000.0, (2, 3, 3))
+    assert float(jnp.abs(c - a).max()) > 1e-3
+
+
+def test_moe_routing_conservation():
+    """With no drops, MoE output == sum of gated expert outputs computed
+    naively per token."""
+    cfg = _nodrop(reduced_config("olmoe-1b-7b"))
+    params, _ = unbox(moe_lib.init_moe(jax.random.PRNGKey(0), cfg))
+    x = jax.random.normal(jax.random.PRNGKey(1), (2, 8, cfg.d_model),
+                          jnp.float32)
+    y, aux = moe_lib.apply_moe(params, cfg, x)
+    assert float(aux["moe_drop_frac"]) == 0.0
+
+    # naive reference
+    m = cfg.moe
+    xt = x.reshape(-1, cfg.d_model)
+    logits = xt @ params["router"]
+    probs = jax.nn.softmax(logits, -1)
+    gate, eid = jax.lax.top_k(probs, m.top_k)
+    gate = gate / gate.sum(-1, keepdims=True)
+    y_ref = jnp.zeros_like(xt)
+    for t in range(xt.shape[0]):
+        acc = jnp.zeros((cfg.d_model,))
+        for j in range(m.top_k):
+            e = int(eid[t, j])
+            h = jax.nn.silu(xt[t] @ params["w_gate"][e]) * \
+                (xt[t] @ params["w_up"][e])
+            acc = acc + gate[t, j] * (h @ params["w_down"][e])
+        y_ref = y_ref.at[t].set(acc)
+    np.testing.assert_allclose(np.asarray(y.reshape(-1, cfg.d_model)),
+                               np.asarray(y_ref), atol=2e-3, rtol=2e-3)
+
+
+def test_moe_capacity_drops_are_counted():
+    cfg = reduced_config("olmoe-1b-7b")
+    cfg = dataclasses.replace(
+        cfg, moe=dataclasses.replace(cfg.moe, capacity_factor=0.05))
+    params, _ = unbox(moe_lib.init_moe(jax.random.PRNGKey(0), cfg))
+    x = jax.random.normal(jax.random.PRNGKey(1), (2, 64, cfg.d_model))
+    _, aux = moe_lib.apply_moe(params, cfg, x)
+    assert float(aux["moe_drop_frac"]) > 0.1
+
+
+def test_chunked_attention_matches_unchunked():
+    """q-block chunking (the flash-attention memory shape) is exact."""
+    base = reduced_config("yi-6b")
+    toks = jax.random.randint(jax.random.PRNGKey(1), (2, 64), 0,
+                              base.vocab_size)
+    cfg_un = dataclasses.replace(base, attn_q_chunk=None)
+    cfg_ch = dataclasses.replace(base, attn_q_chunk=16)
+    params, _ = unbox(lm.init_lm(jax.random.PRNGKey(0), cfg_un))
+    a, _ = lm.forward(params, cfg_un, {"tokens": toks})
+    b, _ = lm.forward(params, cfg_ch, {"tokens": toks})
+    np.testing.assert_allclose(np.asarray(a), np.asarray(b), atol=2e-2,
+                               rtol=2e-2)
+
+
+def test_scan_vs_unrolled_layers_identical():
+    """The dry-run probes' unrolled path == the scanned path."""
+    cfg = _nodrop(reduced_config("jamba-v0.1-52b"))
+    params, _ = unbox(lm.init_lm(jax.random.PRNGKey(0), cfg))
+    toks = jax.random.randint(jax.random.PRNGKey(1), (2, 16), 0,
+                              cfg.vocab_size)
+    a, _ = lm.forward(params, cfg, {"tokens": toks})
+    b, _ = lm.forward(params, dataclasses.replace(cfg, scan_layers=False),
+                      {"tokens": toks})
+    # bf16 activations: scan vs unrolled lowers to different fusion
+    # orders; agreement is to bf16 precision, not bitwise
+    np.testing.assert_allclose(np.asarray(a), np.asarray(b), atol=3e-2,
+                               rtol=3e-2)
+
+
+@pytest.mark.parametrize("arch", list_archs())
+def test_shape_cell_applicability(arch):
+    """long_500k only runs on sub-quadratic archs (assignment rule)."""
+    cfg = get_config(arch)
+    skip = shape_applicable(cfg, "long_500k")
+    sub_quadratic = cfg.family in ("ssm", "hybrid") or \
+        (cfg.swa_window is not None and not cfg.is_encdec)
+    assert (skip is None) == sub_quadratic
+    for shape in ("train_4k", "prefill_32k", "decode_32k"):
+        assert shape_applicable(cfg, shape) is None
+
+
+def test_param_counts_match_public_sizes():
+    """Sanity: derived param counts are in the right ballpark of the
+    models' public names (30B-A3B, 1B-7B, 6B, 32B, 1.8B, 7B, 72B, 52B)."""
+    expect = {
+        "qwen3-moe-30b-a3b": (29e9, 32e9),
+        "olmoe-1b-7b": (6e9, 8e9),
+        "yi-6b": (5.5e9, 6.5e9),
+        "qwen3-32b": (30e9, 35e9),
+        "h2o-danube-1.8b": (1.5e9, 2.1e9),
+        "qwen2-7b": (6.5e9, 8.5e9),
+        "qwen2-vl-72b": (68e9, 76e9),
+        "jamba-v0.1-52b": (49e9, 56e9),
+        "mamba2-2.7b": (2.4e9, 3.0e9),
+    }
+    for arch, (lo, hi) in expect.items():
+        n = get_config(arch).param_count()
+        assert lo <= n <= hi, (arch, n)
+    # active params for the MoEs
+    a = get_config("qwen3-moe-30b-a3b").active_param_count()
+    assert 2.5e9 <= a <= 4e9, a
+    a = get_config("olmoe-1b-7b").active_param_count()
+    assert 0.9e9 <= a <= 1.6e9, a
+
+
+def test_swa_key_slicing_matches_full_mask():
+    """§Perf A.1: per-q-block K/V window slicing (sk > window+qc) is
+    exact vs masked full-key attention."""
+    base = dataclasses.replace(reduced_config("h2o-danube-1.8b"),
+                               swa_window=16, act_dtype="float32")
+    toks = jax.random.randint(jax.random.PRNGKey(1), (2, 128), 0,
+                              base.vocab_size)
+    params, _ = unbox(lm.init_lm(jax.random.PRNGKey(0), base))
+    a, _ = lm.forward(params, dataclasses.replace(base, attn_q_chunk=None),
+                      {"tokens": toks})
+    b, _ = lm.forward(params, dataclasses.replace(base, attn_q_chunk=32),
+                      {"tokens": toks})
+    np.testing.assert_allclose(np.asarray(a), np.asarray(b), atol=2e-3,
+                               rtol=2e-3)
+
+
+def test_kv_pad_is_exact():
+    """§Perf it.3: repeating KV heads to the TP width never changes the
+    attention output."""
+    base = dataclasses.replace(reduced_config("yi-6b"),
+                               act_dtype="float32")
+    toks = jax.random.randint(jax.random.PRNGKey(1), (2, 32), 0,
+                              base.vocab_size)
+    params, _ = unbox(lm.init_lm(jax.random.PRNGKey(0), base))
+    a, _ = lm.forward(params, dataclasses.replace(base, attn_kv_pad_to=0),
+                      {"tokens": toks})
+    b, _ = lm.forward(params, dataclasses.replace(base, attn_kv_pad_to=4),
+                      {"tokens": toks})
+    np.testing.assert_allclose(np.asarray(a), np.asarray(b), atol=1e-4,
+                               rtol=1e-4)
+
+
+def test_rule_presets_resolve():
+    from repro.common.partitioning import rule_preset
+    for name in ("baseline", "nosp", "noz", "ep2d", "tinydp"):
+        rules = rule_preset(name)
+        assert rules.mesh_axes("batch") is not None
+    assert rule_preset("tinydp").mesh_axes("mlp") is None
+    assert rule_preset("baseline").mesh_axes("act_seq") == "model"
