@@ -15,6 +15,7 @@ import jax.numpy as jnp
 from benchmarks.common import Csv, small_field, time_fn
 from repro.common.param import unbox
 from repro.core import fields
+from repro.kernels.common import pick_level_group, table_block_bytes
 
 
 def run(csv: Csv, n: int = 262144):
@@ -44,4 +45,7 @@ def run(csv: Csv, n: int = 262144):
         t_k = time_fn(jax.jit(lambda p, x, dd: fields.apply_field(
             p, cfg, x[:8192], dd[:8192] if dd is not None else None,
             use_pallas=True)), params, pts, dirs)
-        csv.add(f"fig13/{app}/pallas_interpret_8k", t_k, "interpret=True")
+        g = pick_level_group(cfg.grid, jnp.float32)
+        csv.add(f"fig13/{app}/pallas_interpret_8k", t_k,
+                f"level_group={g}_table_block_bytes="
+                f"{table_block_bytes(cfg.grid, g, jnp.float32)}")

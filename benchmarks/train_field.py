@@ -1,0 +1,47 @@
+"""Training-route benchmark: the field train step through the XLA path vs
+the Pallas NFP kernel route (forward = fused encode+MLP kernel, backward =
+the custom-VJP scatter-add table transpose).
+
+The paper's apps are trained then served; with the kernels' custom VJPs
+the SAME use_pallas flag now covers both. Also reports the touched-rows
+fraction of the hash-table gradient — the sparsity that motivates the
+compressed gradient all-reduce in train/compression.py — and the kernel's
+VMEM plan (level-group size + resident table bytes) at each scale.
+"""
+from __future__ import annotations
+
+import jax
+
+from benchmarks.common import Csv, small_field, time_fn
+from repro.common.param import unbox
+from repro.core import fields, train
+from repro.kernels.common import pick_level_group, table_block_bytes
+from repro.train import optim
+
+
+def run(csv: Csv, batch: int = 8192, log2_T: int = 14):
+    for app in ("gia", "nsdf"):
+        cfg = small_field(app, "hash", log2_T=log2_T)
+        params, _ = unbox(fields.init_field(jax.random.PRNGKey(0), cfg))
+        opt_state = optim.adam_init(params)
+        b = train.make_batch(cfg, jax.random.PRNGKey(1), batch)
+
+        for use_pallas in (False, True):
+            step = train.make_field_train_step(cfg, use_pallas=use_pallas)
+            # interpret-mode Pallas is CPU-slow; shrink its batch so the
+            # benchmark stays runnable — the structural claim is the VJP
+            # route itself, not CPU wall time
+            bb = (b if not use_pallas else
+                  {k: v[:1024] for k, v in b.items()})
+            t = time_fn(step, params, opt_state, bb)
+            label = "pallas" if use_pallas else "xla"
+            csv.add(f"train/{app}/{label}_step", t,
+                    f"batch={len(next(iter(bb.values())))}")
+
+        stats = train.sparse_table_stats(cfg, params, b)
+        csv.add(f"train/{app}/grad_sparsity", 0.0,
+                f"touched_rows_frac={stats['touched_rows_frac']:.4f}")
+        g = pick_level_group(cfg.grid, jax.numpy.float32)
+        csv.add(f"train/{app}/vmem_plan", 0.0,
+                f"level_group={g}_table_block_bytes="
+                f"{table_block_bytes(cfg.grid, g, jax.numpy.float32)}")

@@ -22,6 +22,9 @@ def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--steps", type=int, default=150)
     ap.add_argument("--rays", type=int, default=512)
+    ap.add_argument("--use-pallas", action="store_true",
+                    help="train through the NFP Pallas kernel route "
+                         "(interpret mode off-TPU; slow on CPU)")
     args = ap.parse_args()
 
     cfg = fields.make_field_config("nerf", "hash")
@@ -31,7 +34,8 @@ def main():
     print(f"training NeRF for {args.steps} steps "
           f"({args.rays} rays/step, 32 samples/ray) ...")
     params, hist = train_field(
-        cfg, steps=args.steps, batch_size=args.rays, seed=0, log_every=25,
+        cfg, steps=args.steps, batch_size=args.rays, seed=0,
+        use_pallas=args.use_pallas, log_every=25,
         callback=lambda i, l, p: print(f"  step {i:4d} loss {l:.5f} "
                                        f"psnr {psnr(l):.1f} dB"))
 

@@ -1,0 +1,2 @@
+# Optional-dependency shims. Nothing here is imported unless the real
+# package is missing (see tests/conftest.py for the hypothesis gate).

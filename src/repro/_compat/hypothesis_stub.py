@@ -1,0 +1,111 @@
+"""Deterministic stand-in for the tiny slice of `hypothesis` this repo uses.
+
+The real `hypothesis` is declared in pyproject's dev extras, but the
+hermetic CI/container image cannot always install it. When it is missing,
+``tests/conftest.py`` registers this module as ``hypothesis`` in
+``sys.modules`` so the property-test modules still collect and run.
+
+Supported subset (exactly what the tests use):
+  * ``@given(*strategies)``             — positional strategies only
+  * ``@settings(max_examples=, deadline=)`` — outer or inner decorator
+  * ``strategies.floats(lo, hi)``
+  * ``strategies.integers(lo, hi)``
+  * ``strategies.sampled_from(seq)``
+
+Examples are drawn from a PRNG seeded by the test's qualified name, so a
+run is reproducible and a failure message's inputs can be replayed. Bounds
+of every range strategy are always included in the drawn examples (the
+cheap version of hypothesis's boundary shrinking).
+"""
+from __future__ import annotations
+
+import functools
+import inspect
+import random
+import types
+from typing import Callable, Sequence
+
+DEFAULT_MAX_EXAMPLES = 20
+
+
+class SearchStrategy:
+    """A draw function plus the boundary examples to always try first."""
+
+    def __init__(self, draw: Callable[[random.Random], object],
+                 boundary: Sequence = ()):
+        self._draw = draw
+        self.boundary = tuple(boundary)
+
+    def example(self, rng: random.Random):
+        return self._draw(rng)
+
+
+def floats(min_value: float, max_value: float, **_: object) -> SearchStrategy:
+    lo, hi = float(min_value), float(max_value)
+    return SearchStrategy(lambda rng: rng.uniform(lo, hi), (lo, hi))
+
+
+def integers(min_value: int, max_value: int, **_: object) -> SearchStrategy:
+    lo, hi = int(min_value), int(max_value)
+    return SearchStrategy(lambda rng: rng.randint(lo, hi), (lo, hi))
+
+
+def sampled_from(elements: Sequence) -> SearchStrategy:
+    seq = list(elements)
+    return SearchStrategy(lambda rng: seq[rng.randrange(len(seq))],
+                          seq[:1] + seq[-1:])
+
+
+strategies = types.ModuleType("hypothesis.strategies")
+strategies.floats = floats
+strategies.integers = integers
+strategies.sampled_from = sampled_from
+strategies.SearchStrategy = SearchStrategy
+
+
+class settings:
+    """Decorator recording max_examples; deadline is accepted and ignored
+    (this stub never times out a body)."""
+
+    def __init__(self, max_examples: int | None = None, deadline=None,
+                 **_: object):
+        self.max_examples = max_examples
+
+    def __call__(self, fn):
+        if self.max_examples is not None:
+            fn._stub_max_examples = self.max_examples
+        return fn
+
+
+def given(*strats: SearchStrategy):
+    if not strats or any(not isinstance(s, SearchStrategy) for s in strats):
+        raise TypeError("stub @given supports positional strategies only")
+
+    def decorate(fn):
+        inner_max = getattr(fn, "_stub_max_examples", None)
+
+        @functools.wraps(fn)
+        def wrapper(*args, **kwargs):
+            n = getattr(wrapper, "_stub_max_examples",
+                        inner_max) or DEFAULT_MAX_EXAMPLES
+            rng = random.Random(f"{fn.__module__}.{fn.__qualname__}")
+            # boundary examples first (all-lo, all-hi), then random draws
+            cases = [[s.boundary[0] for s in strats],
+                     [s.boundary[-1] for s in strats]]
+            while len(cases) < n:
+                cases.append([s.example(rng) for s in strats])
+            for case in cases[:max(n, 1)]:
+                try:
+                    fn(*args, *case, **kwargs)
+                except Exception as e:
+                    raise AssertionError(
+                        f"{fn.__qualname__} failed on drawn example "
+                        f"{tuple(case)!r}") from e
+
+        # pytest must not see the drawn parameters as fixture requests:
+        # drop the wraps() signature forwarding.
+        del wrapper.__wrapped__
+        wrapper.__signature__ = inspect.Signature()
+        return wrapper
+
+    return decorate

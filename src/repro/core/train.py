@@ -20,17 +20,19 @@ from repro.data import scenes
 from repro.train import optim
 
 
-def field_loss(params, cfg: FieldConfig, batch: Dict, fused: bool = True
-               ) -> jnp.ndarray:
-    if cfg.app == "gia":
-        pred = fields.apply_field(params, cfg, batch["points"], fused=fused)
-        return jnp.mean((pred - batch["target"]) ** 2)
-    if cfg.app == "nsdf":
-        pred = fields.apply_field(params, cfg, batch["points"], fused=fused)
+def field_loss(params, cfg: FieldConfig, batch: Dict, fused: bool = True,
+               use_pallas: bool = False) -> jnp.ndarray:
+    """use_pallas routes encode+MLP through the NFP Pallas kernels — fully
+    differentiable via their custom VJPs (scatter-add table transpose), so
+    the same flag serves both render AND train benchmarks."""
+    if cfg.app in ("gia", "nsdf"):
+        pred = fields.apply_field(params, cfg, batch["points"], fused=fused,
+                                  use_pallas=use_pallas)
         return jnp.mean((pred - batch["target"]) ** 2)
     # nerf / nvr: render rays and compare pixels
     def fapply(p, d):
-        return fields.apply_field(params, cfg, p, d, fused=fused)
+        return fields.apply_field(params, cfg, p, d, fused=fused,
+                                  use_pallas=use_pallas)
     pred = render.render_rays(fapply, batch["origins"], batch["dirs"],
                               n_samples=batch.get("n_samples", 32),
                               rng=None)
@@ -38,13 +40,14 @@ def field_loss(params, cfg: FieldConfig, batch: Dict, fused: bool = True
 
 
 def make_field_train_step(cfg: FieldConfig, opt_cfg: Optional[optim.AdamConfig]
-                          = None, fused: bool = True) -> Callable:
+                          = None, fused: bool = True,
+                          use_pallas: bool = False) -> Callable:
     opt_cfg = opt_cfg or optim.AdamConfig(lr=1e-2)
 
     @jax.jit
     def step(params, opt_state, batch):
-        loss, grads = jax.value_and_grad(field_loss)(params, cfg, batch,
-                                                     fused=fused)
+        loss, grads = jax.value_and_grad(field_loss)(
+            params, cfg, batch, fused=fused, use_pallas=use_pallas)
         params, opt_state, metrics = optim.adam_update(
             grads, opt_state, params, opt_cfg)
         metrics["loss"] = loss
@@ -67,7 +70,8 @@ def make_batch(cfg: FieldConfig, rng, batch_size: int,
 
 
 def train_field(cfg: FieldConfig, steps: int = 200, batch_size: int = 2048,
-                seed: int = 0, fused: bool = True, log_every: int = 50,
+                seed: int = 0, fused: bool = True, use_pallas: bool = False,
+                log_every: int = 50,
                 opt_cfg: Optional[optim.AdamConfig] = None,
                 callback: Optional[Callable] = None):
     """End-to-end field training against the analytic scene."""
@@ -75,7 +79,8 @@ def train_field(cfg: FieldConfig, steps: int = 200, batch_size: int = 2048,
     k_init, key = jax.random.split(key)
     params, _spec = unbox(fields.init_field(k_init, cfg))
     opt_state = optim.adam_init(params)
-    step_fn = make_field_train_step(cfg, opt_cfg, fused=fused)
+    step_fn = make_field_train_step(cfg, opt_cfg, fused=fused,
+                                    use_pallas=use_pallas)
     cam = scenes.default_camera() if cfg.app in ("nerf", "nvr") else None
     history = []
     for i in range(steps):
@@ -90,9 +95,10 @@ def train_field(cfg: FieldConfig, steps: int = 200, batch_size: int = 2048,
     return params, history
 
 
-def sparse_table_stats(cfg: FieldConfig, params, batch) -> Dict[str, float]:
+def sparse_table_stats(cfg: FieldConfig, params, batch,
+                       use_pallas: bool = False) -> Dict[str, float]:
     """Fraction of hash-table rows touched by one batch's gradient."""
-    grads = jax.grad(field_loss)(params, cfg, batch)
+    grads = jax.grad(field_loss)(params, cfg, batch, use_pallas=use_pallas)
     g = grads["grid"]                       # (L, T, F)
     touched = jnp.any(g != 0.0, axis=-1)    # (L, T)
     return {

@@ -29,3 +29,35 @@ def pad_batch(x: jnp.ndarray, block: int):
 
 def round_up(x: int, m: int) -> int:
     return -(-x // m) * m
+
+
+# --------------------------------------------------------------- VMEM budget
+# TPU cores have ~16 MB of VMEM. The encode/fused-field kernels keep a
+# *group* of grid-table levels resident per grid step (DESIGN.md §2); the
+# group size is the largest one whose table block fits this budget. The
+# default is half the core's VMEM so the point/feature/weight blocks and
+# Pallas's double-buffering always have headroom.
+VMEM_BYTES_PER_CORE = 16 * 1024 * 1024
+DEFAULT_VMEM_BUDGET_BYTES = VMEM_BYTES_PER_CORE // 2
+
+
+def table_block_bytes(cfg, level_group: int, dtype) -> int:
+    """VMEM bytes of one (level_group, T, F) table block."""
+    return (level_group * cfg.table_size * cfg.n_features
+            * jnp.dtype(dtype).itemsize)
+
+
+def pick_level_group(cfg, dtype, vmem_budget_bytes: int | None = None) -> int:
+    """Largest divisor of L whose (g, T, F) table block fits the budget.
+
+    The floor is 1: at extreme table sizes (gia's log2_T=24) even a single
+    level exceeds any realistic budget — row-tiling within a level is the
+    documented follow-up (DESIGN.md §2), so we degrade to one level per
+    step rather than refuse to run.
+    """
+    budget = (vmem_budget_bytes if vmem_budget_bytes is not None
+              else DEFAULT_VMEM_BUDGET_BYTES)
+    for g in range(cfg.n_levels, 0, -1):
+        if cfg.n_levels % g == 0 and table_block_bytes(cfg, g, dtype) <= budget:
+            return g
+    return 1

@@ -7,98 +7,88 @@ the multi-layer perceptron engine". On the GPU baseline the encoding kernel
 round-trips its output through device memory (Fig. 7); the NFP eliminates
 that traffic.
 
-TPU realization: ONE ``pallas_call`` whose body is
-    gather+lerp over all L levels  (VPU, tables VMEM-resident)
-      -> concat features            (stays in VMEM scratch)
-      -> L-layer fused MLP          (MXU, weights VMEM-resident)
-so the (B, L*F) encoded features NEVER touch HBM. Per tile of B points the
-HBM traffic is exactly ``B*d*4`` in + ``B*out*4`` bytes out (plus one-time
-table/weight loads) — the Table III I/O model of the accelerator.
+TPU realization (DESIGN.md §2): ONE ``pallas_call`` on a 2-D grid of
+(batch tiles x level groups), level groups innermost. Per batch tile the
+encode steps stream one (level_group, T, F) table block at a time through
+VMEM (the full (L, T, F) stack is 64 MB at paper scale — 4x a core's
+VMEM) and write their features into a persistent VMEM scratch — the 'MLP
+input memory'. The last group's step runs the fused MLP from that scratch
+on the MXU, so the (B, L*F) encoded features NEVER touch HBM. Per tile of
+B points the HBM traffic is exactly ``B*d*4`` in + ``B*out*4`` bytes out
+plus the streamed table blocks — the Table III I/O model.
 """
 from __future__ import annotations
 
 import functools
-from typing import Sequence
 
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
 
-from repro.core.encoding import GridConfig, HASH_PRIMES
+from repro.core.encoding import GridConfig
 from repro.core.mlp import MLPConfig
-from repro.kernels.common import round_up
+from repro.kernels.common import (default_interpret, pick_level_group,
+                                  round_up)
 from repro.kernels.fused_mlp.fused_mlp import pad_dim
+from repro.kernels.hashgrid.hashgrid import encode_one_level, level_meta
 
 
-def _encode_block(pts, tab, cfg: GridConfig, resolutions, hashed):
-    """In-kernel encode: (blk, d) + (L, T, F) -> (blk, L*F) f32."""
-    blk = pts.shape[0]
-    mask = jnp.uint32(cfg.table_size - 1)
-    corners = [tuple((c >> i) & 1 for i in range(cfg.dim))
-               for c in range(1 << cfg.dim)]
-    level_feats = []
-    for l in range(cfg.n_levels):
-        res = resolutions[l]
-        pos = pts * jnp.float32(res)
-        cell = jnp.floor(pos)
-        frac = pos - cell
-        cell = jnp.clip(cell.astype(jnp.int32), 0, res - 1)
-        acc = jnp.zeros((blk, cfg.n_features), jnp.float32)
-        for bits in corners:
-            if hashed[l]:
-                idx = ((cell[:, 0] + bits[0]).astype(jnp.uint32)
-                       * jnp.uint32(HASH_PRIMES[0]))
-                for i in range(1, cfg.dim):
-                    idx = idx ^ ((cell[:, i] + bits[i]).astype(jnp.uint32)
-                                 * jnp.uint32(HASH_PRIMES[i]))
-            else:
-                stride = 1
-                idx = jnp.zeros((blk,), jnp.uint32)
-                for i in range(cfg.dim):
-                    idx = idx + ((cell[:, i] + bits[i]).astype(jnp.uint32)
-                                 * jnp.uint32(stride))
-                    stride *= res + 1
-            idx = (idx & mask).astype(jnp.int32)
-            feats = jnp.take(tab[l], idx, axis=0)
-            w = jnp.ones((blk,), jnp.float32)
-            for i in range(cfg.dim):
-                w = w * (frac[:, i] if bits[i] else 1.0 - frac[:, i])
-            acc = acc + w[:, None] * feats.astype(jnp.float32)
-        level_feats.append(acc)
-    return jnp.concatenate(level_feats, axis=-1)
+def _field_kernel(meta_ref, points_ref, tables_ref, w_in_ref, w_hid_ref,
+                  w_out_ref, out_ref, feat_ref, *, grid_cfg: GridConfig,
+                  mlp_cfg: MLPConfig, level_group: int, n_groups: int):
+    j = pl.program_id(1)                     # level group (innermost)
+    # --- encoding engine: stream this group's table block, write features
+    #     straight into the MLP input scratch (never to HBM) ---
+    @pl.when(j == 0)
+    def _():                                 # also zeroes the MXU padding
+        feat_ref[...] = jnp.zeros_like(feat_ref)
 
-
-def _field_kernel(points_ref, tables_ref, w_in_ref, w_hid_ref, w_out_ref,
-                  out_ref, *, grid_cfg: GridConfig, mlp_cfg: MLPConfig,
-                  resolutions, hashed, padded_in: int):
     pts = points_ref[...].astype(jnp.float32)
-    tab = tables_ref[...]
-    # --- encoding engine (features stay in VMEM; no HBM round trip) ---
-    feats = _encode_block(pts, tab, grid_cfg, resolutions, hashed)
-    feats = jnp.pad(feats, ((0, 0), (0, padded_in - feats.shape[1])))
-    # --- MLP engine ---
-    h = jnp.maximum(
-        jnp.dot(feats, w_in_ref[...].astype(jnp.float32),
-                preferred_element_type=jnp.float32), 0.0)
-    for k in range(mlp_cfg.n_hidden - 1):
+    tab = tables_ref[...]                    # (g, T, F) block in VMEM
+    nf = grid_cfg.n_features
+    for li in range(level_group):
+        acc = encode_one_level(pts, tab[li], meta_ref,
+                               j * level_group + li, cfg=grid_cfg)
+        feat_ref[:, pl.ds((j * level_group + li) * nf, nf)] = acc
+
+    # --- MLP engine: fires once per batch tile, on the last group ---
+    @pl.when(j == n_groups - 1)
+    def _():
         h = jnp.maximum(
-            jnp.dot(h, w_hid_ref[k].astype(jnp.float32),
+            jnp.dot(feat_ref[...], w_in_ref[...].astype(jnp.float32),
                     preferred_element_type=jnp.float32), 0.0)
-    out_ref[...] = jnp.dot(
-        h, w_out_ref[...].astype(jnp.float32),
-        preferred_element_type=jnp.float32).astype(out_ref.dtype)
+        for k in range(mlp_cfg.n_hidden - 1):
+            h = jnp.maximum(
+                jnp.dot(h, w_hid_ref[k].astype(jnp.float32),
+                        preferred_element_type=jnp.float32), 0.0)
+        out_ref[...] = jnp.dot(
+            h, w_out_ref[...].astype(jnp.float32),
+            preferred_element_type=jnp.float32).astype(out_ref.dtype)
 
 
 def fused_field_pallas(points: jnp.ndarray, tables: jnp.ndarray,
                        w_in: jnp.ndarray, w_hidden: jnp.ndarray,
                        w_out: jnp.ndarray, grid_cfg: GridConfig,
                        mlp_cfg: MLPConfig, *, block_b: int = 512,
-                       interpret: bool = True, mxu_align: int = 128
+                       level_group: int | None = None,
+                       vmem_budget_bytes: int | None = None,
+                       interpret: bool | None = None, mxu_align: int = 128
                        ) -> jnp.ndarray:
-    """points (B, d) -> (B, out_dim): encode + MLP, one kernel."""
+    """points (B, d) -> (B, out_dim): encode + MLP, one kernel.
+
+    Tables may be fp32 or bf16 (the accelerator stores fp16 features);
+    features and accumulation are always f32."""
+    if interpret is None:
+        interpret = default_interpret()
     b = points.shape[0]
     assert b % block_b == 0, (b, block_b)
     assert mlp_cfg.in_dim == grid_cfg.out_dim
+
+    g = (level_group if level_group is not None
+         else pick_level_group(grid_cfg, tables.dtype, vmem_budget_bytes))
+    assert grid_cfg.n_levels % g == 0, (grid_cfg.n_levels, g)
+    n_groups = grid_cfg.n_levels // g
 
     din = round_up(mlp_cfg.in_dim, mxu_align)
     hdim = round_up(mlp_cfg.hidden_dim, mxu_align)
@@ -110,26 +100,30 @@ def fused_field_pallas(points: jnp.ndarray, tables: jnp.ndarray,
                else jnp.zeros((1, hdim, hdim), w_in.dtype))
     w_out_p = pad_dim(w_out, hdim, dout)
 
-    resolutions = tuple(grid_cfg.level_resolution(l)
-                        for l in range(grid_cfg.n_levels))
-    hashed = tuple(grid_cfg.level_is_hashed(l)
-                   for l in range(grid_cfg.n_levels))
     kernel = functools.partial(
         _field_kernel, grid_cfg=grid_cfg, mlp_cfg=mlp_cfg,
-        resolutions=resolutions, hashed=hashed, padded_in=din)
+        level_group=g, n_groups=n_groups)
 
     out = pl.pallas_call(
         kernel,
-        grid=(b // block_b,),
+        # level groups INNER: the feature scratch must fill before the MLP
+        # fires, so groups sweep fastest within one batch tile. Table
+        # blocks are therefore re-streamed per tile — the price of VMEM
+        # feasibility (DESIGN.md §2 quantifies the traffic).
+        grid=(b // block_b, n_groups),
         in_specs=[
-            pl.BlockSpec((block_b, grid_cfg.dim), lambda i: (i, 0)),
-            pl.BlockSpec(tables.shape, lambda i: (0, 0, 0)),   # grid_sram
-            pl.BlockSpec((din, hdim), lambda i: (0, 0)),
-            pl.BlockSpec((n_hid_stack, hdim, hdim), lambda i: (0, 0, 0)),
-            pl.BlockSpec((hdim, dout), lambda i: (0, 0)),
+            pl.BlockSpec(memory_space=pltpu.SMEM),       # level meta
+            pl.BlockSpec((block_b, grid_cfg.dim), lambda i, j: (i, 0)),
+            pl.BlockSpec((g, grid_cfg.table_size, grid_cfg.n_features),
+                         lambda i, j: (j, 0, 0)),        # grid_sram block
+            pl.BlockSpec((din, hdim), lambda i, j: (0, 0)),
+            pl.BlockSpec((n_hid_stack, hdim, hdim), lambda i, j: (0, 0, 0)),
+            pl.BlockSpec((hdim, dout), lambda i, j: (0, 0)),
         ],
-        out_specs=pl.BlockSpec((block_b, dout), lambda i: (i, 0)),
+        out_specs=pl.BlockSpec((block_b, dout), lambda i, j: (i, 0)),
         out_shape=jax.ShapeDtypeStruct((b, dout), jnp.float32),
+        # the 'MLP input memory' the encoding engine writes into
+        scratch_shapes=[pltpu.VMEM((block_b, din), jnp.float32)],
         interpret=interpret,
-    )(points, tables, w_in_p, w_hid_p, w_out_p)
+    )(level_meta(grid_cfg), points, tables, w_in_p, w_hid_p, w_out_p)
     return out[:, :mlp_cfg.out_dim]

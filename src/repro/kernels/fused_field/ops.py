@@ -3,7 +3,13 @@
 For NeRF the fused kernel computes the density path (encode + density MLP);
 the color MLP consumes the SH-encoded direction via the fused_mlp kernel —
 two pallas_calls, matching the two NFP engine passes the paper schedules
-for NeRF's two MLPs (Fig. 4)."""
+for NeRF's two MLPs (Fig. 4).
+
+``field`` is differentiable: the forward is the fused Pallas kernel, the
+backward rematerializes encode + MLP in pure JAX (the encode transpose is
+the sparse table scatter-add), so ``jax.grad`` through
+``apply_field(..., use_pallas=True)`` works and ``core/train.py`` can
+train on the kernel route."""
 from __future__ import annotations
 
 import functools
@@ -13,27 +19,67 @@ import jax.numpy as jnp
 
 from repro.core import encoding as enc
 from repro.core.fields import FieldConfig
-from repro.kernels.common import default_interpret, pad_batch
+from repro.kernels.common import default_interpret, pad_batch, pick_level_group
 from repro.kernels.fused_field.fused_field import fused_field_pallas
 from repro.kernels.fused_mlp import ops as mlp_ops
 
 
+def _field_ref(points, tables, w_in, w_hidden, w_out, grid_cfg, mlp_cfg):
+    """Pure-JAX twin of the fused kernel: encode + the shared MLP twin
+    (one definition of the rematerialized math — see fused_mlp.ops)."""
+    feats = enc.grid_encode(points, tables, grid_cfg)
+    return mlp_ops._mlp_ref(feats, w_in, w_hidden, w_out, mlp_cfg)
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(5, 6, 7, 8, 9))
+def _field(points, tables, w_in, w_hidden, w_out, grid_cfg, mlp_cfg,
+           block_b: int, level_group: int, interpret: bool):
+    pts, n = pad_batch(points, block_b)
+    out = fused_field_pallas(pts, tables, w_in, w_hidden, w_out, grid_cfg,
+                             mlp_cfg, block_b=block_b,
+                             level_group=level_group, interpret=interpret)
+    return out[:n]
+
+
+def _field_fwd(points, tables, w_in, w_hidden, w_out, grid_cfg, mlp_cfg,
+               block_b, level_group, interpret):
+    out = _field(points, tables, w_in, w_hidden, w_out, grid_cfg, mlp_cfg,
+                 block_b, level_group, interpret)
+    return out, (points, tables, w_in, w_hidden, w_out)
+
+
+def _field_bwd(grid_cfg, mlp_cfg, block_b, level_group, interpret,
+               residuals, g):
+    points, tables, w_in, w_hidden, w_out = residuals
+    _, vjp_fn = jax.vjp(
+        lambda *args: _field_ref(*args, grid_cfg, mlp_cfg),
+        points, tables, w_in, w_hidden, w_out)
+    return vjp_fn(g.astype(jnp.float32))
+
+
+_field.defvjp(_field_fwd, _field_bwd)
+
+
 @functools.partial(jax.jit,
                    static_argnames=("grid_cfg", "mlp_cfg", "block_b",
+                                    "level_group", "vmem_budget_bytes",
                                     "interpret"))
 def field(points, tables, mlp_params, grid_cfg, mlp_cfg, *,
-          block_b: int = 512, interpret: bool | None = None):
+          block_b: int = 512, level_group: int | None = None,
+          vmem_budget_bytes: int | None = None,
+          interpret: bool | None = None):
     if interpret is None:
         interpret = default_interpret()
+    if level_group is None:
+        level_group = pick_level_group(grid_cfg, tables.dtype,
+                                       vmem_budget_bytes)
     block_b = min(block_b, max(8, points.shape[0]))
-    pts, n = pad_batch(points, block_b)
     w_hidden = mlp_params.get(
         "w_hidden", jnp.zeros((1, mlp_cfg.hidden_dim, mlp_cfg.hidden_dim),
                               mlp_params["w_in"].dtype))
-    out = fused_field_pallas(pts, tables, mlp_params["w_in"], w_hidden,
-                             mlp_params["w_out"], grid_cfg, mlp_cfg,
-                             block_b=block_b, interpret=interpret)
-    return out[:n]
+    return _field(points, tables, mlp_params["w_in"], w_hidden,
+                  mlp_params["w_out"], grid_cfg, mlp_cfg, block_b,
+                  level_group, interpret)
 
 
 def apply_field_fused(params, cfg: FieldConfig, points, dirs=None,

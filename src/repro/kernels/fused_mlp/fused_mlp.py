@@ -21,7 +21,7 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
 from repro.core.mlp import MLPConfig
-from repro.kernels.common import round_up
+from repro.kernels.common import default_interpret, round_up
 
 
 def _mlp_kernel(x_ref, w_in_ref, w_hid_ref, w_out_ref, out_ref, *,
@@ -48,13 +48,15 @@ def pad_dim(w: jnp.ndarray, rows: int, cols: int) -> jnp.ndarray:
 
 def fused_mlp_pallas(x: jnp.ndarray, w_in: jnp.ndarray, w_hidden: jnp.ndarray,
                      w_out: jnp.ndarray, cfg: MLPConfig, *,
-                     block_b: int = 512, interpret: bool = True,
+                     block_b: int = 512, interpret: bool | None = None,
                      mxu_align: int = 128) -> jnp.ndarray:
     """x (B, in_dim); weights as in core.mlp.init_mlp -> (B, out_dim).
 
     B must be a multiple of block_b (ops.py pads). Feature dims are padded
     to ``mxu_align`` lanes; zero padding is exact (ReLU(0)=0, 0-rows
     contribute nothing)."""
+    if interpret is None:
+        interpret = default_interpret()
     b = x.shape[0]
     assert b % block_b == 0, (b, block_b)
     din = round_up(cfg.in_dim, mxu_align)

@@ -1,4 +1,9 @@
-"""Jitted public wrapper for the fused MLP kernel."""
+"""Jitted public wrapper for the fused MLP kernel.
+
+Differentiable: forward through the Pallas kernel, backward by
+rematerializing the (tiny) MLP in pure JAX — the activations are cheaper
+to recompute than to spill, exactly the fully-fused-MLP training argument.
+"""
 from __future__ import annotations
 
 import functools
@@ -11,16 +16,48 @@ from repro.kernels.common import default_interpret, pad_batch
 from repro.kernels.fused_mlp.fused_mlp import fused_mlp_pallas
 
 
+def _mlp_ref(x, w_in, w_hidden, w_out, cfg: MLPConfig):
+    """Pure-JAX twin of the kernel math (f32 accumulation, no biases)."""
+    h = jnp.maximum(
+        jnp.dot(x, w_in, preferred_element_type=jnp.float32), 0.0)
+    for k in range(cfg.n_hidden - 1):
+        h = jnp.maximum(
+            jnp.dot(h, w_hidden[k], preferred_element_type=jnp.float32), 0.0)
+    return jnp.dot(h, w_out, preferred_element_type=jnp.float32)
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(4, 5, 6))
+def _mlp(x, w_in, w_hidden, w_out, cfg: MLPConfig, block_b: int,
+         interpret: bool):
+    xp, n = pad_batch(x, block_b)
+    out = fused_mlp_pallas(xp, w_in, w_hidden, w_out, cfg, block_b=block_b,
+                           interpret=interpret)
+    return out[:n]
+
+
+def _mlp_fwd(x, w_in, w_hidden, w_out, cfg, block_b, interpret):
+    out = _mlp(x, w_in, w_hidden, w_out, cfg, block_b, interpret)
+    return out, (x, w_in, w_hidden, w_out)
+
+
+def _mlp_bwd(cfg, block_b, interpret, residuals, g):
+    x, w_in, w_hidden, w_out = residuals
+    _, vjp_fn = jax.vjp(
+        lambda *args: _mlp_ref(*args, cfg), x, w_in, w_hidden, w_out)
+    return vjp_fn(g)
+
+
+_mlp.defvjp(_mlp_fwd, _mlp_bwd)
+
+
 @functools.partial(jax.jit, static_argnames=("cfg", "block_b", "interpret"))
 def mlp(params, x: jnp.ndarray, cfg: MLPConfig, *, block_b: int = 512,
         interpret: bool | None = None) -> jnp.ndarray:
     if interpret is None:
         interpret = default_interpret()
     block_b = min(block_b, max(8, x.shape[0]))
-    xp, n = pad_batch(x, block_b)
     w_hidden = params.get("w_hidden",
                           jnp.zeros((1, cfg.hidden_dim, cfg.hidden_dim),
                                     params["w_in"].dtype))
-    out = fused_mlp_pallas(xp, params["w_in"], w_hidden, params["w_out"],
-                           cfg, block_b=block_b, interpret=interpret)
-    return out[:n]
+    return _mlp(x, params["w_in"], w_hidden, params["w_out"], cfg, block_b,
+                interpret)

@@ -2,93 +2,157 @@
 encoding engine, Section V / Fig. 9-a).
 
 Hardware mapping (DESIGN.md §2):
-  * ``grid_sram``  -> the full (L, T, F) table stack is a VMEM-resident
-    block (index_map pins it for every grid step, so Mosaic keeps it live
-    across the whole batch — the 'cache once, look up the entire frame'
-    policy of the paper).
-  * 16 level engines -> the level loop is unrolled in-kernel; each level's
-    gather+lerp vectorizes on the VPU.
+  * ``grid_sram``  -> a (level_group, T, F) *block* of the table stack is
+    VMEM-resident per grid step. The paper's 'cache once, look up the
+    entire frame' policy holds per level group: the grid iterates level
+    groups in the OUTER dimension, so each table block is fetched from HBM
+    exactly once and reused across every batch tile. The group size is the
+    largest divisor of L whose block fits ``vmem_budget_bytes``
+    (``kernels.common.pick_level_group``) — pinning the full (L, T, F)
+    stack at the paper's Table I scale (log2_T=19, L=16, F=2, fp32) would
+    need 64 MB, 4x the core's entire VMEM.
+  * level engines    -> the in-group level loop is unrolled in-kernel; each
+    level's gather+lerp vectorizes on the VPU. Per-level resolution and
+    hashed-ness are read from an SMEM meta table so ONE kernel
+    specialization serves every level group.
   * modulo -> shift  -> ``& (T-1)`` bitmask (T is a power of two).
   * input FIFO       -> the batch grid dimension; Pallas double-buffers the
     HBM->VMEM point tile fetch against compute of the previous tile.
 
-Grid: 1-D over batches of ``block_b`` points. Each step encodes block_b
-points across all L levels and writes a (block_b, L*F) tile.
+Grid: 2-D (level groups x batch tiles). Step (j, i) encodes block_b points
+for levels [j*g, (j+1)*g) and writes a (block_b, g*F) output tile.
 """
 from __future__ import annotations
 
 import functools
-from typing import Sequence
 
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
 
 from repro.core.encoding import GridConfig, HASH_PRIMES
+from repro.kernels.common import default_interpret, pick_level_group
 
 
-def _encode_kernel(points_ref, tables_ref, out_ref, *, cfg: GridConfig,
-                   resolutions: Sequence[int], hashed: Sequence[bool]):
-    pts = points_ref[...].astype(jnp.float32)          # (blk, d)
-    tab = tables_ref[...]                              # (L, T, F) in VMEM
+def level_meta(cfg: GridConfig) -> jnp.ndarray:
+    """(L, 2) int32 [resolution, is_hashed] — the SMEM side table that lets
+    one kernel body serve every level group."""
+    return jnp.asarray(
+        [[cfg.level_resolution(l), int(cfg.level_is_hashed(l))]
+         for l in range(cfg.n_levels)], jnp.int32)
+
+
+def table_block_spec(cfg: GridConfig, level_group: int) -> pl.BlockSpec:
+    """The per-level-group table BlockSpec: (g, T, F) resident per step."""
+    return pl.BlockSpec((level_group, cfg.table_size, cfg.n_features),
+                        lambda j, i: (j, 0, 0))
+
+
+def encode_one_level(pts, tab, meta_ref, level, *, cfg: GridConfig
+                     ) -> jnp.ndarray:
+    """In-kernel encode of ONE level: gather 2^d corners + d-linear lerp.
+
+    pts (blk, d) f32 in [0,1]; tab (T, F) VMEM table slice; meta_ref SMEM
+    (L, 2); level dynamic scalar -> (blk, F) f32.
+
+    Every caller loops levels and stores each level's (blk, F) slice
+    separately, so the per-level compute graph is *structurally identical*
+    regardless of the level-group size — which keeps outputs bit-identical
+    across group/budget choices (asserted by tests/test_kernels.py; a
+    fused concat across a variable-size group lets XLA contract FMAs
+    differently per group size).
+    """
     blk = pts.shape[0]
-    mask = jnp.uint32(cfg.table_size - 1)              # modulo -> AND
+    mask = jnp.uint32(cfg.table_size - 1)                # modulo -> AND
     # corner offsets as static python bit tuples (no captured constants)
     corners = [tuple((c >> i) & 1 for i in range(cfg.dim))
                for c in range(1 << cfg.dim)]
 
-    for l in range(cfg.n_levels):                      # the 16 engines
-        res = resolutions[l]
-        pos = pts * jnp.float32(res)
-        cell = jnp.floor(pos)
-        frac = pos - cell
-        cell = jnp.clip(cell.astype(jnp.int32), 0, res - 1)
-        acc = jnp.zeros((blk, cfg.n_features), jnp.float32)
-        for bits in corners:                           # 2^d corners
-            if hashed[l]:
-                idx = ((cell[:, 0] + bits[0]).astype(jnp.uint32)
-                       * jnp.uint32(HASH_PRIMES[0]))
-                for i in range(1, cfg.dim):
-                    idx = idx ^ ((cell[:, i] + bits[i]).astype(jnp.uint32)
-                                 * jnp.uint32(HASH_PRIMES[i]))
-            else:
-                stride = 1
-                idx = jnp.zeros((blk,), jnp.uint32)
-                for i in range(cfg.dim):
-                    idx = idx + ((cell[:, i] + bits[i]).astype(jnp.uint32)
-                                 * jnp.uint32(stride))
-                    stride *= res + 1
-            idx = (idx & mask).astype(jnp.int32)
-            feats = jnp.take(tab[l], idx, axis=0)      # VMEM gather
-            w = jnp.ones((blk,), jnp.float32)
+    # hashed-ness per level is a pure cfg property; only when the config
+    # MIXES dense-coarse and hashed-fine levels does the kernel need the
+    # dynamic select (the level id is dynamic across groups). Uniform
+    # configs (dense/tiled, or an all-hashed hash config) statically skip
+    # the unused index form — half the index math in the hot loop.
+    hashed_kinds = {cfg.level_is_hashed(l) for l in range(cfg.n_levels)}
+
+    res = meta_ref[level, 0]
+    is_hashed = meta_ref[level, 1]
+    pos = pts * res.astype(jnp.float32)
+    cell = jnp.floor(pos)
+    frac = pos - cell
+    cell = jnp.clip(cell.astype(jnp.int32), 0, res - 1)
+    acc = jnp.zeros((blk, cfg.n_features), jnp.float32)
+    for bits in corners:                                 # 2^d corners
+        hidx = didx = None
+        if True in hashed_kinds:
+            hidx = ((cell[:, 0] + bits[0]).astype(jnp.uint32)
+                    * jnp.uint32(HASH_PRIMES[0]))
+            for i in range(1, cfg.dim):
+                hidx = hidx ^ ((cell[:, i] + bits[i]).astype(jnp.uint32)
+                               * jnp.uint32(HASH_PRIMES[i]))
+        if False in hashed_kinds:
+            stride = jnp.uint32(1)
+            sres = (res + 1).astype(jnp.uint32)
+            didx = jnp.zeros((blk,), jnp.uint32)
             for i in range(cfg.dim):
-                w = w * (frac[:, i] if bits[i] else 1.0 - frac[:, i])
-            acc = acc + w[:, None] * feats.astype(jnp.float32)
-        out_ref[:, l * cfg.n_features:(l + 1) * cfg.n_features] = (
-            acc.astype(out_ref.dtype))
+                didx = didx + ((cell[:, i] + bits[i]).astype(jnp.uint32)
+                               * stride)
+                stride = stride * sres
+        if len(hashed_kinds) == 2:   # mixed: select; gather stays single
+            idx = jnp.where(is_hashed == 1, hidx, didx)
+        else:
+            idx = hidx if hidx is not None else didx
+        idx = (idx & mask).astype(jnp.int32)
+        fc = jnp.take(tab, idx, axis=0)                  # VMEM gather
+        w = jnp.ones((blk,), jnp.float32)
+        for i in range(cfg.dim):
+            w = w * (frac[:, i] if bits[i] else 1.0 - frac[:, i])
+        acc = acc + w[:, None] * fc.astype(jnp.float32)
+    return acc
+
+
+def _encode_kernel(meta_ref, points_ref, tables_ref, out_ref, *,
+                   cfg: GridConfig, level_group: int):
+    j = pl.program_id(0)                                 # level group
+    pts = points_ref[...].astype(jnp.float32)            # (blk, d)
+    tab = tables_ref[...]                                # (g, T, F) in VMEM
+    nf = cfg.n_features
+    for li in range(level_group):                        # the level engines
+        acc = encode_one_level(pts, tab[li], meta_ref,
+                               j * level_group + li, cfg=cfg)
+        out_ref[:, li * nf:(li + 1) * nf] = acc.astype(out_ref.dtype)
 
 
 def hashgrid_encode_pallas(points: jnp.ndarray, tables: jnp.ndarray,
                            cfg: GridConfig, *, block_b: int = 1024,
-                           interpret: bool = True) -> jnp.ndarray:
-    """points (B, d) in [0,1], tables (L, T, F) -> (B, L*F).
+                           level_group: int | None = None,
+                           vmem_budget_bytes: int | None = None,
+                           interpret: bool | None = None) -> jnp.ndarray:
+    """points (B, d) in [0,1], tables (L, T, F) fp32/bf16 -> (B, L*F) f32.
 
     B must be a multiple of block_b (ops.py pads)."""
+    if interpret is None:
+        interpret = default_interpret()
     b = points.shape[0]
     assert b % block_b == 0, (b, block_b)
-    resolutions = tuple(cfg.level_resolution(l) for l in range(cfg.n_levels))
-    hashed = tuple(cfg.level_is_hashed(l) for l in range(cfg.n_levels))
-    kernel = functools.partial(_encode_kernel, cfg=cfg,
-                               resolutions=resolutions, hashed=hashed)
+    g = (level_group if level_group is not None
+         else pick_level_group(cfg, tables.dtype, vmem_budget_bytes))
+    assert cfg.n_levels % g == 0, (cfg.n_levels, g)
+    n_groups = cfg.n_levels // g
+    kernel = functools.partial(_encode_kernel, cfg=cfg, level_group=g)
     return pl.pallas_call(
         kernel,
-        grid=(b // block_b,),
+        # level groups OUTER: each table block is fetched once and reused
+        # across all batch tiles (batch is the fast axis).
+        grid=(n_groups, b // block_b),
         in_specs=[
-            pl.BlockSpec((block_b, cfg.dim), lambda i: (i, 0)),
-            # whole table stack pinned in VMEM for every grid step
-            pl.BlockSpec(tables.shape, lambda i: (0, 0, 0)),
+            pl.BlockSpec(memory_space=pltpu.SMEM),       # level meta
+            pl.BlockSpec((block_b, cfg.dim), lambda j, i: (i, 0)),
+            table_block_spec(cfg, g),
         ],
-        out_specs=pl.BlockSpec((block_b, cfg.out_dim), lambda i: (i, 0)),
+        out_specs=pl.BlockSpec((block_b, g * cfg.n_features),
+                               lambda j, i: (i, j)),
         out_shape=jax.ShapeDtypeStruct((b, cfg.out_dim), jnp.float32),
         interpret=interpret,
-    )(points, tables)
+    )(level_meta(cfg), points, tables)

@@ -1,4 +1,10 @@
-"""Jitted public wrapper for the hashgrid encoding kernel."""
+"""Jitted public wrapper for the hashgrid encoding kernel.
+
+``encode`` is differentiable: the forward runs the Pallas kernel, the
+backward is the explicit scatter-add transpose in ``vjp.py`` — so
+training (``core/train.py``) can route the encode through the kernel
+path instead of falling back to XLA.
+"""
 from __future__ import annotations
 
 import functools
@@ -7,18 +13,44 @@ import jax
 import jax.numpy as jnp
 
 from repro.core.encoding import GridConfig
-from repro.kernels.common import default_interpret, pad_batch
+from repro.kernels.common import default_interpret, pad_batch, pick_level_group
+from repro.kernels.hashgrid import vjp
 from repro.kernels.hashgrid.hashgrid import hashgrid_encode_pallas
 
 
-@functools.partial(jax.jit, static_argnames=("cfg", "block_b", "interpret"))
-def encode(points: jnp.ndarray, tables: jnp.ndarray, cfg: GridConfig,
-           *, block_b: int = 1024, interpret: bool | None = None
-           ) -> jnp.ndarray:
-    if interpret is None:
-        interpret = default_interpret()
-    block_b = min(block_b, max(8, points.shape[0]))
+@functools.partial(jax.custom_vjp, nondiff_argnums=(2, 3, 4, 5))
+def _encode(points, tables, cfg: GridConfig, block_b: int, level_group: int,
+            interpret: bool):
     padded, n = pad_batch(points, block_b)
     out = hashgrid_encode_pallas(padded, tables, cfg, block_b=block_b,
+                                 level_group=level_group,
                                  interpret=interpret)
     return out[:n]
+
+
+def _encode_fwd(points, tables, cfg, block_b, level_group, interpret):
+    out = _encode(points, tables, cfg, block_b, level_group, interpret)
+    return out, (points, tables)
+
+
+def _encode_bwd(cfg, block_b, level_group, interpret, residuals, g):
+    points, tables = residuals
+    return vjp.encode_bwd(points, tables, cfg, g)
+
+
+_encode.defvjp(_encode_fwd, _encode_bwd)
+
+
+@functools.partial(jax.jit, static_argnames=("cfg", "block_b", "level_group",
+                                             "vmem_budget_bytes",
+                                             "interpret"))
+def encode(points: jnp.ndarray, tables: jnp.ndarray, cfg: GridConfig,
+           *, block_b: int = 1024, level_group: int | None = None,
+           vmem_budget_bytes: int | None = None,
+           interpret: bool | None = None) -> jnp.ndarray:
+    if interpret is None:
+        interpret = default_interpret()
+    if level_group is None:
+        level_group = pick_level_group(cfg, tables.dtype, vmem_budget_bytes)
+    block_b = min(block_b, max(8, points.shape[0]))
+    return _encode(points, tables, cfg, block_b, level_group, interpret)

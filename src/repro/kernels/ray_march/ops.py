@@ -16,6 +16,9 @@ def composite(rgb, sigma, dts, *, block_r: int = 256,
     if interpret is None:
         interpret = default_interpret()
     r = sigma.shape[0]
+    # deterministic sampling yields broadcast (1, S) dts; the BlockSpec
+    # needs the full (R, S) — materialize the broadcast before tiling
+    dts = jnp.broadcast_to(dts, sigma.shape)
     block_r = min(block_r, max(8, r))
     pad = (-r) % block_r
     if pad:

@@ -18,6 +18,8 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
+from repro.kernels.common import default_interpret
+
 
 def _composite_kernel(rgb_ref, sigma_ref, dts_ref, pix_ref, opac_ref):
     sigma = sigma_ref[...].astype(jnp.float32)           # (blk, S)
@@ -36,8 +38,10 @@ def _composite_kernel(rgb_ref, sigma_ref, dts_ref, pix_ref, opac_ref):
 
 
 def composite_pallas(rgb: jnp.ndarray, sigma: jnp.ndarray, dts: jnp.ndarray,
-                     *, block_r: int = 256, interpret: bool = True):
+                     *, block_r: int = 256, interpret: bool | None = None):
     """(R, S, 3), (R, S), (R, S) -> ((R, 3), (R,)). R % block_r == 0."""
+    if interpret is None:
+        interpret = default_interpret()
     r, s = sigma.shape
     assert r % block_r == 0, (r, block_r)
     pix, opac = pl.pallas_call(

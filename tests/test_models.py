@@ -25,7 +25,17 @@ def _nodrop(cfg, f32: bool = False):
     return cfg
 
 
-@pytest.mark.parametrize("arch", list_archs())
+# the big hybrid/MoE/encdec configs compile for 15-90 s each on CPU;
+# their smoke runs live in the slow tier (each arch stays covered in
+# tier-1 through the prefill/decode parity, scan-parity, MoE routing, or
+# SSD tests that exercise the same blocks at the same reduced scale)
+_SLOW_SMOKE = {"jamba-v0.1-52b", "qwen3-moe-30b-a3b", "whisper-base",
+               "olmoe-1b-7b", "yi-6b", "mamba2-2.7b"}
+
+
+@pytest.mark.parametrize("arch", [
+    pytest.param(a, marks=pytest.mark.slow) if a in _SLOW_SMOKE else a
+    for a in list_archs()])
 def test_arch_smoke_forward_and_train_step(arch):
     """One fwd + one train step per reduced arch; shapes + finite."""
     cfg = reduced_config(arch)
@@ -65,10 +75,10 @@ def test_arch_smoke_forward_and_train_step(arch):
     assert float(l1) < float(l0)   # one step on same batch must improve
 
 
-@pytest.mark.parametrize("arch", ["yi-6b", "h2o-danube-1.8b",
-                                  "qwen3-moe-30b-a3b", "jamba-v0.1-52b",
-                                  "mamba2-2.7b", "whisper-base",
-                                  "qwen2-vl-72b"])
+@pytest.mark.parametrize("arch", [
+    "yi-6b", "h2o-danube-1.8b", "qwen3-moe-30b-a3b",
+    pytest.param("jamba-v0.1-52b", marks=pytest.mark.slow),
+    "mamba2-2.7b", "whisper-base", "qwen2-vl-72b"])
 def test_prefill_decode_matches_forward(arch):
     cfg = _nodrop(reduced_config(arch), f32=True)
     key = jax.random.PRNGKey(0)
@@ -234,18 +244,22 @@ def test_chunked_attention_matches_unchunked():
 
 
 def test_scan_vs_unrolled_layers_identical():
-    """The dry-run probes' unrolled path == the scanned path."""
-    cfg = _nodrop(reduced_config("jamba-v0.1-52b"))
+    """The dry-run probes' unrolled path == the scanned path.
+
+    Diagnosis: in f32 the two paths agree to <1e-7 (semantically
+    identical); the bf16 run diverges up to 6e-2 on 0.38% of elements
+    purely from XLA fusion-order rounding accumulated over depth. So the
+    parity check runs in f32 with a tight tolerance — a real semantic
+    divergence can't hide inside a bf16-noise margin."""
+    cfg = _nodrop(reduced_config("jamba-v0.1-52b"), f32=True)
     params, _ = unbox(lm.init_lm(jax.random.PRNGKey(0), cfg))
     toks = jax.random.randint(jax.random.PRNGKey(1), (2, 16), 0,
                               cfg.vocab_size)
     a, _ = lm.forward(params, cfg, {"tokens": toks})
     b, _ = lm.forward(params, dataclasses.replace(cfg, scan_layers=False),
                       {"tokens": toks})
-    # bf16 activations: scan vs unrolled lowers to different fusion
-    # orders; agreement is to bf16 precision, not bitwise
-    np.testing.assert_allclose(np.asarray(a), np.asarray(b), atol=3e-2,
-                               rtol=3e-2)
+    np.testing.assert_allclose(np.asarray(a), np.asarray(b), atol=1e-5,
+                               rtol=1e-5)
 
 
 @pytest.mark.parametrize("arch", list_archs())

@@ -44,6 +44,7 @@ def test_fallback_logs_record_path():
     assert all(f[0] != "w" or True for f in rules.fallbacks)
 
 
+@pytest.mark.slow
 def test_sharded_train_step_8dev():
     out = _run8("""
         import jax, jax.numpy as jnp, numpy as np
@@ -143,6 +144,7 @@ def test_elastic_restore_across_mesh_shapes():
     assert "ELASTIC_OK" in out
 
 
+@pytest.mark.slow
 def test_compression_in_train_step_8dev():
     out = _run8("""
         import jax, jax.numpy as jnp, numpy as np
@@ -172,6 +174,7 @@ def test_compression_in_train_step_8dev():
     assert "COMPRESS8_OK" in out
 
 
+@pytest.mark.slow
 def test_microbatched_step_matches_plain():
     out = _run8("""
         import jax, jax.numpy as jnp, numpy as np

