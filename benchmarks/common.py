@@ -41,8 +41,4 @@ def small_field(app: str, encoding: str, log2_T: int = 14):
     import dataclasses as dc
     from repro.core import fields
     cfg = fields.make_field_config(app, encoding)
-    g = dc.replace(cfg.grid, log2_table_size=log2_T)
-    if cfg.app == "nerf":
-        return dc.replace(cfg, grid=g)
-    return dc.replace(cfg, grid=g,
-                      mlp=dc.replace(cfg.mlp, in_dim=g.out_dim))
+    return cfg.with_grid(dc.replace(cfg.grid, log2_table_size=log2_T))

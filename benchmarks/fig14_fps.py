@@ -23,9 +23,9 @@ def run(csv: Csv, tile: int = 16384):
         params, _ = unbox(fields.init_field(jax.random.PRNGKey(0), cfg))
         cam = scenes.default_camera(256, 256)
         settings = pipeline.RenderSettings(tile_pixels=tile, n_samples=32)
-        tile_fn = jax.jit(pipeline.make_tile_fn(cfg, settings, cam))
+        tile_fn = jax.jit(pipeline.make_tile_fn(cfg, settings))
         ids = jnp.arange(tile, dtype=jnp.int32)
-        t = time_fn(tile_fn, params, ids)
+        t = time_fn(tile_fn, params, cam, ids)
         pps = tile / t
         for fps in (30, 60, 90, 120):
             budget = pps / fps

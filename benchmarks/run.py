@@ -22,6 +22,7 @@ MODULES = [
     ("fig13", "benchmarks.fig13_kernels"),
     ("fig14", "benchmarks.fig14_fps"),
     ("table3", "benchmarks.table3_bandwidth"),
+    ("serve_engine", "benchmarks.serve_engine"),
     ("train", "benchmarks.train_field"),
     ("roofline", "benchmarks.roofline_report"),
 ]

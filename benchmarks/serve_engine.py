@@ -1,0 +1,57 @@
+"""RenderEngine serving benchmark: requests/sec + tail latency of a mixed
+multi-scene, multi-camera stream on one compiled executable per bucket
+(DESIGN.md §3). Emits CSV rows like the fig benchmarks plus one JSON line
+(``serve_engine_json {...}``) with the full engine stats."""
+from __future__ import annotations
+
+import json
+
+import jax
+import numpy as np
+
+from benchmarks.common import Csv, small_field
+from repro.common.param import unbox
+from repro.core import fields, pipeline
+from repro.data import scenes
+from repro.serve import RenderEngine, RenderRequest
+
+
+def _mixed_stream(engine, scene_names, cams, n_requests, tile, n_pix, seed=0):
+    rng = np.random.default_rng(seed)
+    for r in range(n_requests):
+        ids = rng.integers(0, n_pix, tile).astype(np.int32)
+        engine.submit(RenderRequest(scene=scene_names[r % len(scene_names)],
+                                    camera=cams[r % len(cams)],
+                                    pixel_ids=ids))
+    engine.flush()
+
+
+def run(csv: Csv, n_scenes: int = 2, n_cameras: int = 3,
+        n_requests: int = 24, tile: int = 4096):
+    height = width = 128
+    for app, use_pallas, tp in (("gia", False, tile),
+                                ("nvr", False, tile // 4),
+                                ("gia", True, 256)):
+        cfg = small_field(app, "hash", log2_T=10 if use_pallas else 14)
+        settings = pipeline.RenderSettings(tile_pixels=tp,
+                                           use_pallas=use_pallas)
+        engine = RenderEngine(settings)
+        for s in range(n_scenes):
+            params, _ = unbox(
+                fields.init_field(jax.random.PRNGKey(s), cfg))
+            engine.add_scene(f"s{s}", cfg, params)
+        cams = [scenes.orbit_camera(height, width, float(a))
+                for a in np.linspace(0.0, 2 * np.pi, n_cameras,
+                                     endpoint=False)]
+        engine.warmup()
+        n_req = n_requests if not use_pallas else max(4, n_requests // 4)
+        _mixed_stream(engine, engine.scenes(), cams, n_req, tp,
+                      height * width)
+        st = engine.stats()
+        name = f"serve_engine/{app}{'_pallas' if use_pallas else ''}"
+        csv.add(name, st["p50_ms"] / 1e3,
+                f"rps={st['requests_per_s']:.1f}"
+                f"_p99ms={st['p99_ms']:.1f}"
+                f"_mpixs={st['mpix_per_s']:.2f}"
+                f"_compiles={st['n_traces_total']}")
+        print("serve_engine_json " + json.dumps({"bench": name, **st}))

@@ -18,11 +18,10 @@ from repro.data import scenes  # noqa: E402
 
 
 def main():
-    # Table I GIA config, with a laptop-scale table (T=2^14 vs 2^24)
+    # Table I GIA config, with a laptop-scale table (T=2^14 vs 2^24);
+    # with_grid recomputes the grid-dependent MLP dims
     cfg = fields.make_field_config("gia", "hash")
-    g = dataclasses.replace(cfg.grid, log2_table_size=14)
-    cfg = dataclasses.replace(
-        cfg, grid=g, mlp=dataclasses.replace(cfg.mlp, in_dim=g.out_dim))
+    cfg = cfg.with_grid(dataclasses.replace(cfg.grid, log2_table_size=14))
 
     print("training GIA on the procedural gigapixel image ...")
     params, hist = train_field(cfg, steps=300, batch_size=4096, seed=0,

@@ -1,7 +1,8 @@
-"""End-to-end serving driver (the paper's deployment scenario): train a
-small neural field, then serve batched pixel-tile requests through the
-NGPC-style pipeline — including the Pallas fused-field kernel path — and
-report Mpix/s + frame-budget numbers (paper Fig. 14 style).
+"""End-to-end serving driver (the paper's deployment scenario): train
+several small neural fields, then serve a mixed multi-scene,
+multi-viewpoint request stream through the RenderEngine — one compiled
+executable per bucket, including the Pallas fused-field kernel path — and
+report p50/p99 latency + Mpix/s (paper Fig. 10/14 style; DESIGN.md §3).
 
   PYTHONPATH=src python examples/serve_render.py [--app nvr] [--pallas]
 """
@@ -25,9 +26,15 @@ def main():
                          "(interpret mode on CPU)")
     ap.add_argument("--requests", type=int, default=8)
     ap.add_argument("--train-steps", type=int, default=150)
+    ap.add_argument("--scenes", type=int, default=2)
+    ap.add_argument("--cameras", type=int, default=3)
+    ap.add_argument("--shard", action="store_true",
+                    help="pixel-parallel shard_map over the local mesh")
     args = ap.parse_args()
     serve_render(args.app, args.encoding, train_steps=args.train_steps,
-                 n_requests=args.requests, use_pallas=args.pallas)
+                 n_requests=args.requests, use_pallas=args.pallas,
+                 n_scenes=args.scenes, n_cameras=args.cameras,
+                 shard=args.shard)
 
 
 if __name__ == "__main__":

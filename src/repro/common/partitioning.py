@@ -115,6 +115,13 @@ def _axes_size(mesh: Mesh, axes: MeshAxes) -> int:
     return math.prod(mesh.shape[a] for a in axes)
 
 
+def present_axes(mesh: Mesh, axes: MeshAxes) -> MeshAxes:
+    """Public form of :func:`_present`: the subset of ``axes`` that exist
+    on ``mesh`` (None if none do). Stable API for code outside this
+    module (e.g. repro.serve.sharding)."""
+    return _present(mesh, axes)
+
+
 def _present(mesh: Mesh, axes: MeshAxes) -> MeshAxes:
     """Drop mesh axes that this mesh does not have (e.g. 'pod' single-pod)."""
     if axes is None:

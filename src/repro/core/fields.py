@@ -41,6 +41,22 @@ class FieldConfig:
     def out_dim(self) -> int:
         return {"nerf": 4, "nvr": 4, "gia": 3, "nsdf": 1}[self.app]
 
+    def with_grid(self, grid: GridConfig) -> "FieldConfig":
+        """Replace the grid and recompute every MLP dim derived from it.
+
+        The grid-facing MLP's ``in_dim`` is ``grid.out_dim`` (= L*F): for
+        nerf that is the *density* MLP (the color MLP's input is
+        SH(16) + density feats, grid-independent); for every other app it
+        is the main MLP. Use this instead of hand-patching ``mlp.in_dim``
+        after ``dataclasses.replace(cfg, grid=...)``."""
+        cfg = dataclasses.replace(self, grid=grid)
+        if self.app == "nerf":
+            return dataclasses.replace(
+                cfg, density_mlp=dataclasses.replace(
+                    self.density_mlp, in_dim=grid.out_dim))
+        return dataclasses.replace(
+            cfg, mlp=dataclasses.replace(self.mlp, in_dim=grid.out_dim))
+
 
 def _grid_for(encoding_kind: str, dim: int, growth_hash: float,
               log2_T: int) -> GridConfig:

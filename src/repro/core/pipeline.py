@@ -81,15 +81,19 @@ def shade_nsdf(params, cfg: FieldConfig, origins, dirs,
 
 
 # ---------------------------------------------------------------- tile step
-def make_tile_fn(cfg: FieldConfig, settings: RenderSettings,
-                 cam: render.Camera) -> Callable:
-    """(params, pixel_ids (P,)) -> rgb (P, 3): one schedulable tile."""
+def make_tile_fn(cfg: FieldConfig, settings: RenderSettings) -> Callable:
+    """(params, cam, pixel_ids (P,)) -> rgb (P, 3): one schedulable tile.
+
+    The camera is *data* (a pytree argument), not part of the trace — one
+    compiled tile fn serves every viewpoint/resolution of a
+    ``(app, encoding, tile_pixels, n_samples, dtype)`` bucket."""
     feval = field_eval_fn(cfg, settings)
 
-    def tile(params, pixel_ids):
+    def tile(params, cam, pixel_ids):
         if cfg.app == "gia":
-            py = (pixel_ids // cam.width).astype(jnp.float32) / cam.height
-            px = (pixel_ids % cam.width).astype(jnp.float32) / cam.width
+            w_i = cam.intrinsics[1].astype(jnp.int32)
+            py = (pixel_ids // w_i).astype(jnp.float32) / cam.height
+            px = (pixel_ids % w_i).astype(jnp.float32) / cam.width
             return feval(params, jnp.stack([px, py], axis=-1))
         origins, dirs = render.make_rays(cam, pixel_ids)
         if cfg.app == "nsdf":
@@ -102,23 +106,55 @@ def make_tile_fn(cfg: FieldConfig, settings: RenderSettings,
     return tile
 
 
+# --------------------------------------------------- multi-scene (stacked)
+def stack_scene_params(params_list) -> Dict:
+    """Stack per-scene param trees along a new leading 'scene' axis.
+
+    All trees must have identical structure/shapes (same FieldConfig). The
+    stacked tree is what one compiled executable indexes per request."""
+    return jax.tree.map(lambda *xs: jnp.stack(xs), *params_list)
+
+
+def select_scene(stacked_params, scene_id) -> Dict:
+    """Index the stacked scene axis with a *traced* scene id (gather — no
+    recompile across scenes)."""
+    return jax.tree.map(
+        lambda x: jax.lax.dynamic_index_in_dim(x, scene_id, 0,
+                                               keepdims=False),
+        stacked_params)
+
+
+def make_multi_scene_tile_fn(cfg: FieldConfig,
+                             settings: RenderSettings) -> Callable:
+    """(stacked_params, scene_id, cam, pixel_ids) -> rgb (P, 3).
+
+    Everything request-dependent (scene id, camera, pixel ids) is traced
+    data; everything compiled (field graph, kernel schedule) is shared."""
+    tile = make_tile_fn(cfg, settings)
+
+    def mtile(stacked_params, scene_id, cam, pixel_ids):
+        return tile(select_scene(stacked_params, scene_id), cam, pixel_ids)
+    return mtile
+
+
 def render_frame(params, cfg: FieldConfig, cam: render.Camera,
                  settings: Optional[RenderSettings] = None) -> jnp.ndarray:
     """Render a full frame as a scan over tiles (NGPC batch pipeline)."""
     settings = settings or RenderSettings()
-    n_pixels = cam.height * cam.width
+    height, width = cam.resolution
+    n_pixels = height * width
     tp = settings.tile_pixels
     n_tiles = -(-n_pixels // tp)
     padded = n_tiles * tp
     ids = jnp.arange(padded, dtype=jnp.int32) % n_pixels
     tiles = ids.reshape(n_tiles, tp)
-    tile_fn = make_tile_fn(cfg, settings, cam)
+    tile_fn = make_tile_fn(cfg, settings)
 
     def body(carry, pixel_ids):
-        return carry, tile_fn(params, pixel_ids)
+        return carry, tile_fn(params, cam, pixel_ids)
     _, rgb = jax.lax.scan(body, 0, tiles)
     rgb = rgb.reshape(padded, 3)[:n_pixels]
-    return rgb.reshape(cam.height, cam.width, 3)
+    return rgb.reshape(height, width, 3)
 
 
 def make_render_step(cfg: FieldConfig, settings: Optional[RenderSettings]
@@ -126,7 +162,14 @@ def make_render_step(cfg: FieldConfig, settings: Optional[RenderSettings]
     """The field 'serve_step': (params, pixel_ids (B,)) -> rgb (B, 3).
 
     This is the function the dry-run lowers for the paper's apps — one
-    batched request of pixels against a trained field."""
+    batched request of pixels against a trained field. The camera rides
+    along as a jit constant here (the dry-run fixes one 4k viewpoint);
+    production serving passes it as data via ``make_multi_scene_tile_fn``
+    (repro.serve.engine)."""
     settings = settings or RenderSettings()
     cam = cam or scenes.default_camera(2160, 3840)   # the paper's 4k target
-    return make_tile_fn(cfg, settings, cam)
+    tile_fn = make_tile_fn(cfg, settings)
+
+    def step(params, pixel_ids):
+        return tile_fn(params, cam, pixel_ids)
+    return step

@@ -18,13 +18,65 @@ import jax
 import jax.numpy as jnp
 
 
-@dataclasses.dataclass(frozen=True)
+@jax.tree_util.register_pytree_node_class
 class Camera:
-    """Pinhole camera; pose is camera-to-world."""
-    height: int
-    width: int
-    focal: float
-    c2w: jnp.ndarray  # (4, 4)
+    """Pinhole camera as *traced data*; pose is camera-to-world.
+
+    The camera is a pytree of two arrays — ``intrinsics`` (3,) holding
+    [height, width, focal] and the (4, 4) ``c2w`` pose — so it is passed
+    as an *argument* into jitted render functions rather than baked into
+    the traced closure. One compiled tile executable therefore serves
+    arbitrary viewpoints and resolutions (the serve-engine contract,
+    DESIGN.md §3); only pixel-count shapes, never camera values, are
+    compile-time constants.
+
+    ``height``/``width``/``focal`` are traced scalars. Host-side code that
+    needs concrete frame dimensions (frame assembly, request generation)
+    uses ``resolution``, which is only valid on concrete cameras.
+    """
+
+    def __init__(self, height=None, width=None, focal=None, c2w=None, *,
+                 intrinsics=None):
+        if intrinsics is None:
+            intrinsics = jnp.stack([
+                jnp.asarray(height, jnp.float32),
+                jnp.asarray(width, jnp.float32),
+                jnp.asarray(focal, jnp.float32)])
+            c2w = jnp.asarray(c2w, jnp.float32)
+        self.intrinsics = intrinsics
+        self.c2w = c2w  # (4, 4)
+
+    def tree_flatten(self):
+        return (self.intrinsics, self.c2w), None
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        del aux
+        return cls(intrinsics=children[0], c2w=children[1])
+
+    @property
+    def height(self):
+        return self.intrinsics[0]
+
+    @property
+    def width(self):
+        return self.intrinsics[1]
+
+    @property
+    def focal(self):
+        return self.intrinsics[2]
+
+    @property
+    def resolution(self) -> Tuple[int, int]:
+        """(height, width) as python ints; concrete cameras only."""
+        return int(self.intrinsics[0]), int(self.intrinsics[1])
+
+    def __repr__(self):
+        try:
+            h, w = self.resolution
+            return f"Camera({h}x{w}, focal={float(self.focal):.1f})"
+        except (TypeError, jax.errors.TracerArrayConversionError):
+            return "Camera(<traced>)"
 
 
 def look_at(eye, target, up=(0.0, 0.0, 1.0)) -> jnp.ndarray:
@@ -43,9 +95,14 @@ def look_at(eye, target, up=(0.0, 0.0, 1.0)) -> jnp.ndarray:
 
 def make_rays(cam: Camera, pixel_ids: jnp.ndarray
               ) -> Tuple[jnp.ndarray, jnp.ndarray]:
-    """pixel_ids (R,) flat indices -> (origins (R,3), dirs (R,3))."""
-    py = (pixel_ids // cam.width).astype(jnp.float32)
-    px = (pixel_ids % cam.width).astype(jnp.float32)
+    """pixel_ids (R,) flat indices -> (origins (R,3), dirs (R,3)).
+
+    All camera values are traced — the pixel-id decode divides by the
+    *runtime* width (int32, exact), so one compiled executable serves any
+    resolution/viewpoint."""
+    w_i = cam.intrinsics[1].astype(jnp.int32)
+    py = (pixel_ids // w_i).astype(jnp.float32)
+    px = (pixel_ids % w_i).astype(jnp.float32)
     x = (px - cam.width * 0.5 + 0.5) / cam.focal
     y = (py - cam.height * 0.5 + 0.5) / cam.focal
     d_cam = jnp.stack([x, y, jnp.ones_like(x)], axis=-1)

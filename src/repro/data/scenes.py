@@ -107,7 +107,8 @@ def nsdf_batch(rng, n: int) -> Tuple[jnp.ndarray, jnp.ndarray]:
 
 def nerf_ray_batch(rng, cam: render.Camera, n_rays: int):
     k_pix, k_strat = jax.random.split(rng)
-    pix = jax.random.randint(k_pix, (n_rays,), 0, cam.height * cam.width)
+    h, w = cam.resolution
+    pix = jax.random.randint(k_pix, (n_rays,), 0, h * w)
     origins, dirs = render.make_rays(cam, pix)
     target = gt_render_rays(origins, dirs, rng=k_strat)
     return origins, dirs, target
@@ -117,3 +118,14 @@ def default_camera(height=256, width=256) -> render.Camera:
     return render.Camera(
         height=height, width=width, focal=0.9 * width,
         c2w=render.look_at((2.2, 1.6, 1.8), (0.0, 0.0, 0.0)))
+
+
+def orbit_camera(height: int, width: int, angle: float) -> render.Camera:
+    """Viewpoint on the canonical serving orbit (radius 2.2, z=1.6,
+    looking at the origin) — the multi-camera request streams in
+    launch/serve, benchmarks/serve_engine, and the engine tests all draw
+    from this one recipe."""
+    import math
+    eye = (2.2 * math.cos(angle), 2.2 * math.sin(angle), 1.6)
+    return render.Camera(height=height, width=width, focal=0.9 * width,
+                         c2w=render.look_at(eye, (0.0, 0.0, 0.0)))

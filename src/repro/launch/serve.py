@@ -24,48 +24,68 @@ from repro.launch.mesh import make_local_mesh
 def serve_render(app: str = "gia", encoding: str = "hash",
                  train_steps: int = 150, n_requests: int = 8,
                  tile_pixels: int = 4096, height: int = 128,
-                 width: int = 128, use_pallas: bool = False, seed: int = 0):
-    """Train a small field, then serve batched pixel requests."""
+                 width: int = 128, use_pallas: bool = False, seed: int = 0,
+                 n_scenes: int = 2, n_cameras: int = 3, shard: bool = False):
+    """Train ``n_scenes`` small fields, then serve a mixed request stream
+    (scenes x viewpoints) through the RenderEngine — one compiled
+    executable for the whole bucket, warmup excluded from latency stats."""
     import dataclasses
-    from repro.core import fields, pipeline, render
+    from repro.core import pipeline
     from repro.core.train import train_field
+    from repro.data import scenes
+    from repro.serve import RenderEngine, RenderRequest
 
-    cfg = registry.field_config(app, encoding)
-    # laptop-scale table for the local server
-    g = dataclasses.replace(cfg.grid, log2_table_size=14)
-    cfg = dataclasses.replace(cfg, grid=g)
-    if cfg.app != "nerf":
-        cfg = dataclasses.replace(
-            cfg, mlp=dataclasses.replace(cfg.mlp, in_dim=g.out_dim))
-    print(f"[serve] training {cfg.name} for {train_steps} steps...")
-    params, hist = train_field(cfg, steps=train_steps, batch_size=4096,
-                               seed=seed)
-    print(f"[serve] trained: loss {hist[0][1]:.4f} -> {hist[-1][1]:.4f}")
+    if n_scenes < 1 or n_cameras < 1:
+        raise ValueError(f"need >=1 scene and >=1 camera "
+                         f"(got {n_scenes}, {n_cameras})")
+    base = registry.field_config(app, encoding)
+    # laptop-scale table for the local server (with_grid recomputes the
+    # dependent MLP dims — including nerf's density MLP)
+    cfg = base.with_grid(
+        dataclasses.replace(base.grid, log2_table_size=14))
 
-    cam = render.Camera(height=height, width=width, focal=0.9 * width,
-                        c2w=render.look_at((2.2, 1.6, 1.8), (0, 0, 0)))
     settings = pipeline.RenderSettings(tile_pixels=tile_pixels,
                                        use_pallas=use_pallas)
-    tile_fn = jax.jit(pipeline.make_tile_fn(cfg, settings, cam))
+    mesh = make_local_mesh() if shard else None
+    engine = RenderEngine(settings, mesh=mesh)
+    for s in range(n_scenes):
+        print(f"[serve] training scene {s} ({cfg.name}) "
+              f"for {train_steps} steps...")
+        params, hist = train_field(cfg, steps=train_steps, batch_size=4096,
+                                   seed=seed + s)
+        print(f"[serve] scene {s} trained: "
+              f"loss {hist[0][1]:.4f} -> {hist[-1][1]:.4f}")
+        engine.add_scene(f"scene{s}", cfg, params)
 
-    # batched request loop: each request is a tile of pixel ids
+    # viewpoints orbiting the scene — all served by the same executable
+    cams = [scenes.orbit_camera(height, width, 2.0 * np.pi * c / n_cameras)
+            for c in range(n_cameras)]
+
+    t_warm = engine.warmup()
+    print(f"[serve] warmup (compile, excluded from stats): {t_warm:.2f}s")
+
+    # mixed batched request stream: random (scene, camera, pixels) tuples
     rng = np.random.default_rng(seed)
-    lat = []
     for r in range(n_requests):
-        ids = jnp.asarray(rng.integers(0, height * width, tile_pixels),
-                          dtype=jnp.int32)
-        t0 = time.perf_counter()
-        out = tile_fn(params, ids)
-        out.block_until_ready()
-        lat.append(time.perf_counter() - t0)
-        print(f"[serve] request {r}: {tile_pixels} px in "
-              f"{lat[-1] * 1e3:.1f}ms "
-              f"({tile_pixels / lat[-1] / 1e6:.2f} Mpix/s)")
-    med = sorted(lat)[len(lat) // 2]
-    print(f"[serve] median tile latency {med * 1e3:.1f}ms; "
-          f"4k frame budget needs "
-          f"{3840 * 2160 / tile_pixels * med * 1e3:.0f}ms/frame")
-    return med
+        ids = rng.integers(0, height * width, tile_pixels).astype(np.int32)
+        req = RenderRequest(scene=f"scene{r % n_scenes}",
+                            camera=cams[r % n_cameras], pixel_ids=ids)
+        engine.submit(req)
+    engine.flush()
+
+    stats = engine.stats()
+    print(f"[serve] {stats['n_requests']} requests, "
+          f"{n_scenes} scenes x {n_cameras} cameras: "
+          f"p50 {stats['p50_ms']:.1f}ms p99 {stats['p99_ms']:.1f}ms "
+          f"{stats['mpix_per_s']:.2f} Mpix/s "
+          f"(compiles: {stats['n_traces_total']})")
+    med_s = stats["p50_ms"] / 1e3
+    print(f"[serve] 4k frame budget needs "
+          f"{3840 * 2160 / tile_pixels * med_s * 1e3:.0f}ms/frame")
+    if stats["n_traces_total"] != len(stats["buckets"]):
+        print("[serve] WARNING: more traces than buckets — "
+              "camera/scene leaked into the compiled graph")
+    return stats
 
 
 def serve_lm(arch: str, reduced: bool = True, batch: int = 2,
@@ -133,9 +153,22 @@ def main(argv=None):
     ap.add_argument("--arch", default="olmoe-1b-7b")
     ap.add_argument("--reduced", action="store_true", default=True)
     ap.add_argument("--use-pallas", action="store_true")
+    ap.add_argument("--train-steps", type=int, default=150)
+    ap.add_argument("--requests", type=int, default=8)
+    ap.add_argument("--tile-pixels", type=int, default=4096)
+    ap.add_argument("--height", type=int, default=128)
+    ap.add_argument("--width", type=int, default=128)
+    ap.add_argument("--scenes", type=int, default=2)
+    ap.add_argument("--cameras", type=int, default=3)
+    ap.add_argument("--shard", action="store_true",
+                    help="pixel-parallel shard_map over the local mesh")
     args = ap.parse_args(argv)
     if args.mode == "render":
-        serve_render(args.app, args.encoding, use_pallas=args.use_pallas)
+        serve_render(args.app, args.encoding, use_pallas=args.use_pallas,
+                     train_steps=args.train_steps, n_requests=args.requests,
+                     tile_pixels=args.tile_pixels, height=args.height,
+                     width=args.width, n_scenes=args.scenes,
+                     n_cameras=args.cameras, shard=args.shard)
     else:
         serve_lm(args.arch, args.reduced)
 

@@ -1,0 +1,8 @@
+"""Production render serving: batched multi-scene engine on one compiled
+executable per bucket (DESIGN.md §3)."""
+from repro.serve.engine import (BucketKey, RenderEngine, RenderRequest,
+                                Ticket)
+from repro.serve.sharding import pixel_shard_count, shard_tile_fn
+
+__all__ = ["BucketKey", "RenderEngine", "RenderRequest", "Ticket",
+           "pixel_shard_count", "shard_tile_fn"]

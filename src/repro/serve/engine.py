@@ -1,0 +1,311 @@
+"""RenderEngine — batched multi-scene serving on one compiled executable.
+
+The paper's NGPC serves frames by pipelining fixed-shape batches through
+dedicated engines (Fig. 10); ICARUS argues the unit of scheduling is the
+per-request batch, not the frame. This engine is that idea on TPU/XLA:
+
+  * **Shape buckets.** Requests are grouped by
+    ``(app, encoding, tile_pixels, n_samples, dtype)`` — everything that
+    changes the *compiled graph*. Per bucket there is exactly one traced
+    executable; scene id, camera, and pixel ids are traced *data*
+    (DESIGN.md §3), so new viewpoints and new scenes never recompile.
+  * **Megabatch pad + mask.** Every request is padded to the bucket's
+    fixed ``tile_pixels`` shape; a boolean mask zeroes the padding lanes
+    and the host slices the valid prefix off the result.
+  * **Stacked scenes.** Per-scene field params are stacked along a leading
+    scene axis and gathered per request by a traced ``scene_id`` — N
+    scenes of one bucket share one executable (grid_sram residency: every
+    chip holds every scene's tables).
+  * **Double-buffered dispatch.** ``submit`` returns a :class:`Ticket`
+    immediately (XLA async dispatch); the engine blocks only when more
+    than ``max_inflight`` megabatches are outstanding — tile N+1 is
+    enqueued while tile N is in flight, the Fig. 10 GPU/NGPC overlap.
+  * **Optional pixel-parallel sharding.** With a mesh, the megabatch's
+    pixel axis shard_maps over the 'field_batch' axes of the shared
+    partitioning rules (repro.serve.sharding).
+
+Register all scenes, then ``warmup()`` (compiles each bucket once, outside
+the latency statistics), then submit the mixed request stream.
+"""
+from __future__ import annotations
+
+import collections
+import dataclasses
+import time
+from typing import Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import pipeline, render
+from repro.core.fields import FieldConfig
+from repro.core.pipeline import RenderSettings
+from repro.serve import sharding
+
+
+@dataclasses.dataclass(frozen=True)
+class BucketKey:
+    """Everything that selects a distinct compiled executable.
+
+    ``(app, encoding, tile_pixels, n_samples, dtype)`` is the semantic
+    bucket identity (DESIGN.md §3); ``cfg`` carries the full frozen
+    FieldConfig so configs that differ below the app/encoding level
+    (table size, level count, MLP dims) — which also change the traced
+    graph — land in distinct buckets rather than colliding. ``dtype`` is
+    the ordered tuple of param-leaf dtypes (mixed-precision scenes, e.g.
+    bf16 tables + f32 MLPs, must not stack with all-f32 ones —
+    ``jnp.stack`` would silently promote)."""
+    app: str
+    encoding: str
+    tile_pixels: int
+    n_samples: int
+    dtype: str
+    cfg: FieldConfig
+
+
+@dataclasses.dataclass(frozen=True)
+class RenderRequest:
+    """One pixel-batch request: scene + viewpoint + flat pixel ids.
+
+    ``pixel_ids`` may hold at most the bucket's ``tile_pixels`` entries;
+    larger workloads (full frames) are split into several requests
+    (``RenderEngine.render_frame`` does this)."""
+    scene: str
+    camera: render.Camera
+    pixel_ids: np.ndarray
+
+
+class Ticket:
+    """Handle for an in-flight request; ``result()`` blocks and returns
+    the valid (n, 3) rgb rows.
+
+    Recorded latency is submit→retire (standard serving semantics: it
+    includes queueing behind earlier megabatches). The engine retires
+    device-ready tickets eagerly on every subsequent ``submit`` so a
+    ticket held by the caller does not keep accruing host time."""
+
+    def is_ready(self) -> bool:
+        try:
+            return self._done or bool(self._out.is_ready())
+        except AttributeError:        # non-jax output (sharded host array)
+            return True
+
+    def __init__(self, engine: "RenderEngine", out, n_valid: int,
+                 t_submit: float, warmup: bool):
+        self._engine = engine
+        self._out = out
+        self._n = n_valid
+        self._t_submit = t_submit
+        self._warmup = warmup
+        self._res: Optional[np.ndarray] = None
+        self._done = False
+
+    def result(self) -> np.ndarray:
+        if not self._done:
+            jax.block_until_ready(self._out)
+            t_done = time.perf_counter()
+            self.latency_s = t_done - self._t_submit
+            if not self._warmup:
+                self._engine._record(self.latency_s, self._n, t_done)
+            self._res = np.asarray(self._out)[:self._n]
+            self._done = True
+        return self._res
+
+
+class _Bucket:
+    def __init__(self, cfg: FieldConfig, key: BucketKey):
+        self.cfg = cfg
+        self.key = key
+        self.order: List[str] = []           # scene names, stack order
+        self.params: Dict[str, dict] = {}
+        self.stacked = None                  # cached jnp.stack of params
+        self.fn = None                       # cached jitted executable
+        self.n_traces = 0                    # trace (compile) counter
+
+
+class RenderEngine:
+    """Shape-bucketed, multi-scene, async render server (DESIGN.md §3)."""
+
+    def __init__(self, settings: Optional[RenderSettings] = None,
+                 mesh=None, rules=None, max_inflight: int = 2):
+        self.settings = settings or RenderSettings()
+        self.mesh = mesh
+        self.rules = rules
+        self.max_inflight = max(1, max_inflight)
+        if mesh is not None:
+            shards = sharding.pixel_shard_count(mesh, rules)
+            if self.settings.tile_pixels % shards != 0:
+                raise ValueError(
+                    f"tile_pixels={self.settings.tile_pixels} not divisible"
+                    f" by the mesh's {shards} pixel shards")
+        self._buckets: Dict[BucketKey, _Bucket] = {}
+        self._scene_bucket: Dict[str, BucketKey] = {}
+        self._inflight: collections.deque = collections.deque()
+        self._lat: List[float] = []
+        self._pixels = 0
+        self._t_first: Optional[float] = None
+        self._t_last: Optional[float] = None
+        self._warmup_s = 0.0
+
+    # ------------------------------------------------------------- scenes
+    def add_scene(self, name: str, cfg: FieldConfig, params) -> BucketKey:
+        """Register a trained scene. Scenes stack (= share one compiled
+        executable) iff their FieldConfig and param dtypes match exactly;
+        otherwise they transparently get their own bucket. Register every
+        scene *before* ``warmup()``: growing a bucket's scene axis
+        changes the stacked shape and forces a re-trace."""
+        if name in self._scene_bucket:
+            raise ValueError(f"scene {name!r} already registered")
+        # ordered per-leaf dtypes (tree order is deterministic given cfg):
+        # a bf16-table+f32-MLP scene must not collide with f32-table+bf16-MLP
+        dtype = ",".join(str(l.dtype) for l in jax.tree.leaves(params))
+        key = BucketKey(app=cfg.app, encoding=cfg.grid.kind,
+                        tile_pixels=self.settings.tile_pixels,
+                        n_samples=self.settings.n_samples, dtype=dtype,
+                        cfg=cfg)
+        bucket = self._buckets.get(key)
+        if bucket is None:
+            bucket = self._buckets[key] = _Bucket(cfg, key)
+        bucket.order.append(name)
+        bucket.params[name] = params
+        bucket.stacked = None                # re-stack lazily
+        self._scene_bucket[name] = key
+        return key
+
+    def scenes(self) -> List[str]:
+        return list(self._scene_bucket)
+
+    # ----------------------------------------------------------- compile
+    def _get_stacked(self, key: BucketKey):
+        bucket = self._buckets[key]
+        if bucket.stacked is None:
+            bucket.stacked = pipeline.stack_scene_params(
+                [bucket.params[n] for n in bucket.order])
+        return bucket.stacked
+
+    def _get_fn(self, key: BucketKey):
+        bucket = self._buckets[key]
+        if bucket.fn is None:
+            mtile = pipeline.make_multi_scene_tile_fn(bucket.cfg,
+                                                      self.settings)
+
+            def fn(stacked, scene_id, cam, pixel_ids, mask):
+                bucket.n_traces += 1     # python side effect: counts traces
+                rgb = mtile(stacked, scene_id, cam, pixel_ids)
+                return jnp.where(mask[:, None], rgb, 0.0)
+
+            if self.mesh is not None:
+                fn = sharding.shard_tile_fn(fn, self.mesh, self.rules)
+            bucket.fn = jax.jit(fn)
+        return bucket.fn
+
+    def warmup(self) -> float:
+        """Compile every bucket once (dummy request) — excluded from the
+        latency statistics, so p50/p99 measure serving, not XLA."""
+        t0 = time.perf_counter()
+        cam = render.Camera(height=8, width=8, focal=8.0,
+                            c2w=render.look_at((2.2, 1.6, 1.8), (0, 0, 0)))
+        for key, bucket in self._buckets.items():
+            req = RenderRequest(scene=bucket.order[0], camera=cam,
+                                pixel_ids=np.zeros(1, np.int32))
+            self.submit(req, _warmup=True).result()
+        self._warmup_s += time.perf_counter() - t0
+        return self._warmup_s
+
+    # ------------------------------------------------------------- serve
+    def submit(self, req: RenderRequest, _warmup: bool = False) -> Ticket:
+        key = self._scene_bucket.get(req.scene)
+        if key is None:
+            raise KeyError(f"unknown scene {req.scene!r}")
+        bucket = self._buckets[key]
+        tp = self.settings.tile_pixels
+        ids = np.asarray(req.pixel_ids, np.int32).ravel()
+        n = ids.shape[0]
+        if n > tp:
+            raise ValueError(f"request has {n} pixels > tile_pixels={tp}; "
+                             "split it (see render_frame)")
+        padded = np.zeros(tp, np.int32)
+        padded[:n] = ids
+        mask = np.zeros(tp, bool)
+        mask[:n] = True
+
+        fn = self._get_fn(key)
+        stacked = self._get_stacked(key)
+        sid = jnp.asarray(bucket.order.index(req.scene), jnp.int32)
+        t0 = time.perf_counter()
+        if not _warmup and self._t_first is None:
+            self._t_first = t0
+        out = fn(stacked, sid, req.camera, jnp.asarray(padded),
+                 jnp.asarray(mask))
+        ticket = Ticket(self, out, n, t0, warmup=_warmup)
+        self._inflight.append(ticket)
+        # retire already-finished work first so its recorded latency is
+        # the device completion, not however long the caller sat on it
+        while self._inflight and self._inflight[0].is_ready():
+            self._inflight.popleft().result()
+        # double buffering: keep at most max_inflight megabatches queued —
+        # request N+1 is dispatched above *before* this blocks on N-k.
+        while len(self._inflight) > self.max_inflight:
+            self._inflight.popleft().result()
+        return ticket
+
+    def flush(self):
+        while self._inflight:
+            self._inflight.popleft().result()
+
+    def render_frame(self, scene: str, cam: render.Camera) -> np.ndarray:
+        """Full-frame convenience: split into megabatch tiles, serve them
+        through the pipelined queue, reassemble (H, W, 3)."""
+        h, w = cam.resolution
+        tp = self.settings.tile_pixels
+        tickets = []
+        for start in range(0, h * w, tp):
+            ids = np.arange(start, min(start + tp, h * w), dtype=np.int32)
+            tickets.append(self.submit(RenderRequest(scene, cam, ids)))
+        parts = [t.result() for t in tickets]
+        return np.concatenate(parts, axis=0).reshape(h, w, 3)
+
+    # ------------------------------------------------------------- stats
+    def _record(self, latency_s: float, n_pixels: int, t_done: float):
+        self._lat.append(latency_s)
+        self._pixels += n_pixels
+        self._t_last = t_done
+
+    def trace_counts(self) -> Dict[BucketKey, int]:
+        return {k: b.n_traces for k, b in self._buckets.items()}
+
+    def total_traces(self) -> int:
+        return sum(b.n_traces for b in self._buckets.values())
+
+    def stats(self) -> Dict:
+        lat = sorted(self._lat)
+
+        def pct(p):
+            if not lat:
+                return float("nan")
+            return lat[min(len(lat) - 1, int(round(p / 100.0
+                                                   * (len(lat) - 1))))]
+
+        wall = ((self._t_last - self._t_first)
+                if self._t_first is not None and self._t_last is not None
+                else 0.0)
+        return {
+            "n_requests": len(lat),
+            "p50_ms": pct(50) * 1e3,
+            "p99_ms": pct(99) * 1e3,
+            "mpix_per_s": (self._pixels / wall / 1e6) if wall > 0
+            else float("nan"),
+            "requests_per_s": (len(lat) / wall) if wall > 0
+            else float("nan"),
+            "wall_s": wall,
+            "pixels": self._pixels,
+            "warmup_s": self._warmup_s,
+            "n_traces_total": self.total_traces(),
+            "buckets": {
+                f"{k.app}/{k.encoding}/tp{k.tile_pixels}/s{k.n_samples}"
+                f"/{k.dtype}/T{k.cfg.grid.log2_table_size}"
+                f"L{k.cfg.grid.n_levels}#{i}": {
+                    "n_traces": b.n_traces, "n_scenes": len(b.order)}
+                for i, (k, b) in enumerate(self._buckets.items())},
+        }

@@ -43,13 +43,4 @@ def small_field_config(app: str, encoding: str, log2_T: int = 12,
     g = dataclasses.replace(cfg.grid, log2_table_size=log2_T)
     if n_levels is not None:
         g = dataclasses.replace(g, n_levels=n_levels)
-    if cfg.app == "nerf":
-        if n_levels is None:
-            return dataclasses.replace(cfg, grid=g)
-        return dataclasses.replace(
-            cfg, grid=g,
-            density_mlp=dataclasses.replace(cfg.density_mlp,
-                                            in_dim=g.out_dim))
-    return dataclasses.replace(
-        cfg, grid=g,
-        mlp=dataclasses.replace(cfg.mlp, in_dim=g.out_dim))
+    return cfg.with_grid(g)
