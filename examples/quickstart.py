@@ -24,11 +24,13 @@ def main():
     cfg = cfg.with_grid(dataclasses.replace(cfg.grid, log2_table_size=14))
 
     print("training GIA on the procedural gigapixel image ...")
-    params, hist = train_field(cfg, steps=300, batch_size=4096, seed=0,
-                               log_every=50,
-                               callback=lambda i, l, p: print(
-                                   f"  step {i:4d} loss {l:.5f} "
-                                   f"psnr {psnr(l):.1f} dB"))
+    # training logs come from the engine's per-step metrics dict
+    # (loss/psnr/lr are computed on device inside the scanned chunk)
+    params, hist = train_field(
+        cfg, steps=300, batch_size=4096, seed=0, log_every=50,
+        on_metrics=lambda i, row, st: (i % 50 == 0 or i == 299) and print(
+            f"  step {i:4d} loss {row['loss']:.5f} "
+            f"psnr {row['psnr']:.1f} dB lr {row['lr']:.4f}"))
 
     print("rendering a 128x128 frame through the fused pipeline ...")
     cam = scenes.default_camera(128, 128)

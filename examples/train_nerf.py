@@ -25,6 +25,9 @@ def main():
     ap.add_argument("--use-pallas", action="store_true",
                     help="train through the NFP Pallas kernel route "
                          "(interpret mode off-TPU; slow on CPU)")
+    ap.add_argument("--ckpt-dir", default=None,
+                    help="checkpoint/resume dir (rerun the same command "
+                         "to continue an interrupted run)")
     args = ap.parse_args()
 
     cfg = fields.make_field_config("nerf", "hash")
@@ -33,11 +36,14 @@ def main():
 
     print(f"training NeRF for {args.steps} steps "
           f"({args.rays} rays/step, 32 samples/ray) ...")
+    # training logs come from the engine's per-step metrics dict
     params, hist = train_field(
         cfg, steps=args.steps, batch_size=args.rays, seed=0,
         use_pallas=args.use_pallas, log_every=25,
-        callback=lambda i, l, p: print(f"  step {i:4d} loss {l:.5f} "
-                                       f"psnr {psnr(l):.1f} dB"))
+        ckpt_dir=args.ckpt_dir,
+        on_metrics=lambda i, row, st: (i % 25 == 0 or i == args.steps - 1)
+        and print(f"  step {i:4d} loss {row['loss']:.5f} "
+                  f"psnr {row['psnr']:.1f} dB"))
 
     # novel view (different camera than training distribution center)
     cam = render.Camera(96, 96, focal=86.0,

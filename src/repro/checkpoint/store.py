@@ -15,6 +15,12 @@ Design (1000+ node posture):
   * Restore takes a *target sharding tree* — restoring onto a different
     mesh shape than the save (elastic shrink/grow) is the normal path,
     not a special case.
+
+The training engine (train/loop.py, DESIGN.md §6) drives this store at
+chunk ends: ``AsyncCheckpointer.save`` snapshots to host synchronously
+*before* the next chunk donates the state buffers, and the engine's
+grid-aligned chunking makes resume-from-``latest_step`` bitwise-replay
+the uninterrupted run.
 """
 from __future__ import annotations
 

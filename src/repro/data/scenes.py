@@ -105,12 +105,18 @@ def nsdf_batch(rng, n: int) -> Tuple[jnp.ndarray, jnp.ndarray]:
     return (p + 1.0) / 2.0, sdf_scene(p)     # net sees [0,1]^3
 
 
-def nerf_ray_batch(rng, cam: render.Camera, n_rays: int):
+def nerf_ray_batch(rng, cam: render.Camera, n_rays: int,
+                   gt_samples: int = 64):
+    """Random-pixel ray batch with analytic ground truth. Fully traceable
+    (the pixel bound is the *runtime* h*w, like render.make_rays), so the
+    training engine can synthesize batches inside its scanned chunk.
+    ``gt_samples`` sets the reference-quality compositing depth."""
     k_pix, k_strat = jax.random.split(rng)
-    h, w = cam.resolution
-    pix = jax.random.randint(k_pix, (n_rays,), 0, h * w)
+    hw = (cam.height * cam.width).astype(jnp.int32)
+    pix = jax.random.randint(k_pix, (n_rays,), 0, hw)
     origins, dirs = render.make_rays(cam, pix)
-    target = gt_render_rays(origins, dirs, rng=k_strat)
+    target = gt_render_rays(origins, dirs, n_samples=gt_samples,
+                            rng=k_strat)
     return origins, dirs, target
 
 

@@ -3,18 +3,22 @@
 Host-sharded, double-buffered, deterministic. The stream is a mixture of
 Zipfian unigrams and repeated n-gram motifs, so cross-entropy actually
 *decreases* during the example runs (unlike uniform noise) — enough
-signal to validate end-to-end training without shipping a corpus."""
+signal to validate end-to-end training without shipping a corpus.
+
+``SyntheticTokens.batch(step)`` is the one source of truth for training
+data: a pure function of the global step index, so a resumed run sees
+exactly the stream an uninterrupted run would have (the training
+engine's contract, DESIGN.md §6). ``Prefetcher`` is how the engine
+overlaps host batch assembly + device_put of the *next* chunk with the
+current chunk's compute."""
 from __future__ import annotations
 
 import dataclasses
 import queue
 import threading
-from typing import Dict, Iterator, Optional
+from typing import Dict, Iterator
 
-import jax
 import numpy as np
-
-from repro.models.config import ModelConfig
 
 
 @dataclasses.dataclass(frozen=True)
@@ -102,19 +106,3 @@ class Prefetcher:
                 self._q.get_nowait()
         except queue.Empty:
             pass
-
-
-def make_lm_pipeline(cfg: ModelConfig, seq_len: int, global_batch: int,
-                     seed: int = 0, prefetch: int = 2,
-                     sharding=None) -> Iterator[Dict]:
-    data_cfg = DataConfig(vocab_size=cfg.vocab_size, seq_len=seq_len,
-                          global_batch=global_batch, seed=seed)
-    src = iter(SyntheticTokens(data_cfg))
-
-    def to_device(item):
-        if sharding is not None:
-            return {k: jax.device_put(v, sharding[k] if isinstance(
-                sharding, dict) else sharding) for k, v in item.items()}
-        return item
-
-    return Prefetcher(src, depth=prefetch, to_device=to_device)

@@ -3,91 +3,77 @@ checkpointing, health monitoring, and elastic recovery wired in.
 
   PYTHONPATH=src python -m repro.launch.train --arch olmoe-1b-7b \
       --reduced --steps 50 --batch 8 --seq 128 --ckpt-dir /tmp/ckpt
+
+This is a thin adapter over the shared training engine (train/loop.py,
+DESIGN.md §6): the raw sharded step from ``parallel/api`` is scanned
+into jitted multi-step chunks with donated state, and batches come from
+ONE source of truth — ``SyntheticTokens.batch(step)``, a pure function
+of the global step (restart-deterministic) — stacked per chunk and
+prefetched on a background thread while the previous chunk computes.
 """
 from __future__ import annotations
 
 import argparse
-import time
-from pathlib import Path
 
 import jax
 import numpy as np
 
-from repro.checkpoint import store
-from repro.common.partitioning import DEFAULT_RULES, specs_to_shardings
+from repro.common.partitioning import DEFAULT_RULES
 from repro.configs import registry
 from repro.data import tokens as token_data
 from repro.launch.mesh import make_local_mesh
 from repro.parallel import api
 from repro.runtime.health import (FailurePolicy, HeartbeatMonitor,
                                   StragglerDetector)
-from repro.train import optim
+from repro.train import loop
 
 
 def train_loop(cfg, mesh, *, steps: int, seq_len: int, global_batch: int,
                ckpt_dir=None, ckpt_every: int = 50, rules=None,
                train_cfg: api.TrainConfig = None, log_every: int = 10,
-               seed: int = 0, on_step=None):
+               seed: int = 0, on_step=None, chunk_steps: int = 16):
     rules = rules or DEFAULT_RULES.copy_with()
     train_cfg = train_cfg or api.TrainConfig()
     example = {"batch": {"tokens": jax.ShapeDtypeStruct(
         (global_batch, seq_len), np.int32)}}
-    step_fn, sh = api.make_train_step(cfg, mesh, rules,
-                                      train_cfg=train_cfg,
-                                      example_batch=example)
+    raw_step, sh = api.build_train_step(cfg, mesh, rules,
+                                        train_cfg=train_cfg,
+                                        example_batch=example)
     params = api.init_params(cfg, seed=seed, mesh=mesh, rules=rules)
-    state = {"params": params, "opt": optim.adam_init(params)}
+    state = api.make_train_state(
+        params, compression=train_cfg.compression is not None)
     state = jax.device_put(state, sh["state"])
 
-    start_step = 0
-    ckpt = None
-    if ckpt_dir is not None:
-        ckpt = store.AsyncCheckpointer(ckpt_dir)
-        last = store.latest_step(ckpt_dir)
-        if last is not None:
-            sds = jax.eval_shape(lambda s: s, state)
-            state = store.restore(ckpt_dir, sds, step=last,
-                                  shardings=sh["state"])
-            start_step = last + 1
-            print(f"[train] resumed from step {last}")
-
-    monitor = HeartbeatMonitor(timeout_s=600.0)
-    detector = StragglerDetector()
-    policy = FailurePolicy(monitor, detector)
-    host = f"host{jax.process_index()}"
-
-    pipeline = token_data.make_lm_pipeline(
-        cfg, seq_len, global_batch, seed=seed,
-        sharding=sh["batch"]["tokens"] if sh["batch"] else None)
+    # One source of truth for data: batch(step) is recomputable from the
+    # step index alone, so a resumed run sees the exact stream it would
+    # have seen uninterrupted. The engine stacks chunk_steps batches and
+    # prefetches them (tokens.Prefetcher) while the current chunk runs.
     src = token_data.SyntheticTokens(token_data.DataConfig(
         vocab_size=cfg.vocab_size, seq_len=seq_len,
         global_batch=global_batch, seed=seed))
 
+    monitor = HeartbeatMonitor(timeout_s=600.0)
+    detector = StragglerDetector()
+    engine = loop.TrainEngine(
+        loop.EngineConfig(steps=steps, chunk_steps=chunk_steps,
+                          ckpt_dir=ckpt_dir, ckpt_every=ckpt_every),
+        lambda state, step, batch: raw_step(state, batch),
+        host_batch_fn=src.batch,
+        state_shardings=sh["state"], batch_shardings=sh["batch"],
+        monitor=monitor, detector=detector,
+        policy=FailurePolicy(monitor, detector))
+
     losses = []
-    for step in range(start_step, steps):
-        t0 = time.perf_counter()
-        batch = {k: jax.numpy.asarray(v)
-                 for k, v in src.batch(step).items()}
-        state, metrics = step_fn(state, batch)
-        loss = float(metrics["loss"])
-        dt = time.perf_counter() - t0
-        monitor.beat(host)
-        detector.record(host, dt)
-        losses.append(loss)
+
+    def on_metrics(step, row, st):
+        losses.append(row["loss"])
         if on_step:
-            on_step(step, loss, state)
+            on_step(step, row["loss"], st)
         if step % log_every == 0:
-            print(f"[train] step={step} loss={loss:.4f} "
-                  f"dt={dt * 1e3:.0f}ms")
-        if ckpt is not None and step % ckpt_every == 0 and step > 0:
-            ckpt.save(state, step)
-        ev = policy.poll(step)
-        if ev is not None:
-            print(f"[train] failure event: {ev} — see runtime/elastic.py")
-    if ckpt is not None:
-        ckpt.save(state, steps - 1)
-        ckpt.wait()
-    pipeline.close()
+            print(f"[train] step={step} loss={row['loss']:.4f} "
+                  f"dt={row['dt'] * 1e3:.0f}ms")
+
+    state, _ = engine.run(state, on_metrics=on_metrics)
     return state, losses
 
 
@@ -101,6 +87,8 @@ def main(argv=None):
     ap.add_argument("--data", type=int, default=1)
     ap.add_argument("--model", type=int, default=1)
     ap.add_argument("--ckpt-dir", default=None)
+    ap.add_argument("--ckpt-every", type=int, default=50)
+    ap.add_argument("--chunk-steps", type=int, default=16)
     ap.add_argument("--microbatches", type=int, default=1)
     ap.add_argument("--compression", default=None,
                     choices=[None, "topk", "int8"])
@@ -113,7 +101,9 @@ def main(argv=None):
                          compression=args.compression)
     _, losses = train_loop(cfg, mesh, steps=args.steps, seq_len=args.seq,
                            global_batch=args.batch,
-                           ckpt_dir=args.ckpt_dir, train_cfg=tc)
+                           ckpt_dir=args.ckpt_dir,
+                           ckpt_every=args.ckpt_every,
+                           chunk_steps=args.chunk_steps, train_cfg=tc)
     print(f"[train] loss {losses[0]:.4f} -> {losses[-1]:.4f} "
           f"over {len(losses)} steps")
 

@@ -130,16 +130,19 @@ def _loss_for(cfg: ModelConfig):
     return encdec.loss_fn if cfg.is_encdec else lm.loss_fn
 
 
-def make_train_step(cfg: ModelConfig, mesh: Mesh,
-                    rules: Optional[LogicalRules] = None,
-                    train_cfg: Optional[TrainConfig] = None,
-                    batch_shardings=None,
-                    example_batch=None) -> Tuple[Callable, Dict]:
-    """Build the jitted sharded train step.
+def build_train_step(cfg: ModelConfig, mesh: Mesh,
+                     rules: Optional[LogicalRules] = None,
+                     train_cfg: Optional[TrainConfig] = None,
+                     batch_shardings=None,
+                     example_batch=None) -> Tuple[Callable, Dict]:
+    """Build the *raw* (unjitted) sharded train step.
 
     Returns (step, shardings) where
       step(state, batch) -> (state, metrics)
-    and shardings = {'state': ..., 'batch': ...} (NamedShardings).
+    and shardings = {'state': ..., 'batch': ...} (NamedShardings). The
+    raw step is pure and scannable — the shared training engine
+    (train/loop.py) scans it inside a jitted multi-step chunk;
+    :func:`make_train_step` is the one-step jitted wrapper.
     """
     rules = rules or DEFAULT_RULES
     train_cfg = train_cfg or TrainConfig()
@@ -216,14 +219,27 @@ def make_train_step(cfg: ModelConfig, mesh: Mesh,
         bspecs = batch_specs(cfg, example_batch["batch"], mesh, rules)
         batch_shardings = specs_to_shardings(bspecs, mesh)
 
+    return step, {"state": state_shardings, "batch": batch_shardings,
+                  "state_specs": state_specs}
+
+
+def make_train_step(cfg: ModelConfig, mesh: Mesh,
+                    rules: Optional[LogicalRules] = None,
+                    train_cfg: Optional[TrainConfig] = None,
+                    batch_shardings=None,
+                    example_batch=None) -> Tuple[Callable, Dict]:
+    """Jitted one-step wrapper of :func:`build_train_step` (dry-run and
+    per-step callers; the training engine scans the raw step instead)."""
+    step, sh = build_train_step(cfg, mesh, rules, train_cfg=train_cfg,
+                                batch_shardings=batch_shardings,
+                                example_batch=example_batch)
     jit_step = jax.jit(
         step,
-        in_shardings=(state_shardings, batch_shardings),
-        out_shardings=(state_shardings, None),
+        in_shardings=(sh["state"], sh["batch"]),
+        out_shardings=(sh["state"], None),
         donate_argnums=(0,),
     )
-    return jit_step, {"state": state_shardings, "batch": batch_shardings,
-                      "state_specs": state_specs}
+    return jit_step, sh
 
 
 # ----------------------------------------------------------------- serving

@@ -14,7 +14,13 @@ locally instead of being lost (the standard convergence-preserving trick):
 For the paper's own models the hashgrid-table gradient is *naturally
 sparse* (only rows touched by the batch are nonzero — measured by
 core.train.sparse_table_stats), which is why topk compression on field
-training is near-lossless (EXPERIMENTS.md §Perf)."""
+training is near-lossless (EXPERIMENTS.md §Perf).
+
+Placement (DESIGN.md §6): the training engine (train/loop.py) applies
+``apply_inline`` *after* the data-parallel reduce and *before* the
+optimizer — the compressed exchange models the cross-pod DCN hop. On
+the field path only the ``"grid"`` leaf is compressed, with the error
+feedback persisted in the engine's ``state["efb"]`` across steps."""
 from __future__ import annotations
 
 from typing import Any, Dict, Tuple

@@ -38,7 +38,12 @@ def adam_init(params) -> AdamState:
                      nu=jax.tree.map(zeros, params))
 
 
-def _schedule(cfg: AdamConfig, step):
+def lr_schedule(cfg: AdamConfig, step):
+    """Learning rate at optimizer step ``step`` (1-indexed: the first
+    ``adam_update`` evaluates step=1). Linear warmup over
+    ``lr_warmup_steps``, then cosine decay to 0 over ``lr_decay_steps``;
+    with both at 0 the lr is constant. Shared by both training stacks —
+    the engine reports it per step in the metrics dict as ``lr``."""
     lr = jnp.asarray(cfg.lr, jnp.float32)
     if cfg.lr_warmup_steps > 0:
         lr = lr * jnp.minimum(1.0, (step + 1) / cfg.lr_warmup_steps)
@@ -67,7 +72,7 @@ def adam_update(grads, state: AdamState, params, cfg: AdamConfig
         grads, gnorm = clip_by_global_norm(grads, cfg.grad_clip)
         metrics["grad_norm"] = gnorm
     step = state.step + 1
-    lr = _schedule(cfg, step)
+    lr = lr_schedule(cfg, step)
     b1, b2 = cfg.b1, cfg.b2
     mu = jax.tree.map(lambda m, g: b1 * m + (1 - b1) * g, state.mu, grads)
     nu = jax.tree.map(lambda v, g: b2 * v + (1 - b2) * jnp.square(g),
