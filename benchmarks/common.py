@@ -3,6 +3,7 @@ target — structural metrics come from the dry-run artifacts)."""
 from __future__ import annotations
 
 import dataclasses
+import json
 import time
 from typing import Callable, Dict, List
 
@@ -23,13 +24,33 @@ def time_fn(fn, *args, warmup: int = 2, iters: int = 5) -> float:
 
 
 class Csv:
-    """Collects ``name,us_per_call,derived`` rows (harness contract)."""
+    """Collects ``name,us_per_call,derived`` rows (harness contract) plus
+    structured JSON payloads (``add_json``) that ``benchmarks/run.py
+    --json-out DIR`` writes as ``BENCH_<name>.json`` artifacts (the CI
+    build uploads them; ``make_report.py`` renders the table)."""
 
     def __init__(self):
         self.rows: List[str] = []
+        self.json: Dict[str, Dict] = {}
 
     def add(self, name: str, seconds: float, derived: str = ""):
         self.rows.append(f"{name},{seconds * 1e6:.1f},{derived}")
+
+    def add_json(self, name: str, payload: Dict):
+        """Record a structured result and print it as a greppable
+        ``bench_json {...}`` line. ``name`` becomes the BENCH_*.json
+        filename stem — keep it ``[a-z0-9_]``."""
+        self.json[name] = dict(payload, bench=name)
+        print("bench_json " + json.dumps(self.json[name]))
+
+    def write_json(self, out_dir):
+        from pathlib import Path
+        out = Path(out_dir)
+        out.mkdir(parents=True, exist_ok=True)
+        for name, payload in self.json.items():
+            (out / f"BENCH_{name}.json").write_text(
+                json.dumps(payload, indent=2) + "\n")
+        return sorted(out.glob("BENCH_*.json"))
 
     def emit(self):
         print("name,us_per_call,derived")

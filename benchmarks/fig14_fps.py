@@ -2,15 +2,26 @@
 
 Measures pixels/s of the (fused) field pipeline on this host and derives
 the max resolution at 30/60/90/120 FPS; the TPU-target projection scales
-by the dry-run roofline bound (EXPERIMENTS.md §Roofline)."""
+by the dry-run roofline bound (EXPERIMENTS.md §Roofline).
+
+The ``fig14/culled`` rows benchmark occupancy-culled sampling
+(DESIGN.md §7) against the dense march on a *trained* field: same tile,
+``sample_budget = R*S/4``, XLA and Pallas kernel routes. Alongside the
+speedup they report the live-sample fraction and the culled-vs-dense
+PSNR as a ``BENCH_fig14_culled_*.json`` payload (CI uploads these).
+
+Env knobs: ``BENCH_TRAIN_STEPS`` (default 300) shrinks the training run
+for smoke-level CI; ``BENCH_SMALL=1`` also shrinks tiles/iters."""
 from __future__ import annotations
+
+import os
 
 import jax
 import jax.numpy as jnp
 
 from benchmarks.common import Csv, small_field, time_fn
 from repro.common.param import unbox
-from repro.core import fields, pipeline
+from repro.core import fields, occupancy, pipeline, train
 from repro.data import scenes
 
 RES = {"HD": 1280 * 720, "FHD": 1920 * 1080, "QHD": 2560 * 1440,
@@ -33,3 +44,72 @@ def run(csv: Csv, tile: int = 16384):
             csv.add(f"fig14/{app}/fps{fps}", t,
                     f"pixels_per_frame={budget:.3g}_max_res="
                     f"{fit[-1] if fit else '<HD'}")
+    run_culled(csv)
+
+
+def _train_ray_field(app: str, steps: int, log2_T: int = 14):
+    """A field with actual density structure + its training-time
+    occupancy grid (EMA-refreshed at chunk ends — the train-engine
+    hook this PR adds)."""
+    cfg = small_field(app, "hash", log2_T=log2_T)
+    params, hist = train.train_field(
+        cfg, steps=steps, batch_size=2048, gt_samples=32,
+        chunk_steps=min(64, steps),
+        occupancy_res=32, occupancy_threshold=0.5)
+    return cfg, params, hist
+
+
+def run_culled(csv: Csv):
+    small = os.environ.get("BENCH_SMALL") == "1"
+    steps = int(os.environ.get("BENCH_TRAIN_STEPS",
+                               "24" if small else "300"))
+    n_samples = 32
+    routes = ((False, 1024 if small else 4096),
+              (True, 128 if small else 256))
+    for app in ("nerf", "nvr"):
+        cfg, params, hist = _train_ray_field(app, steps)
+        occ_frac = occupancy.occupied_fraction(params["occupancy"])
+        cam = scenes.default_camera(256, 256)
+        for use_pallas, tile in routes:
+            route = "pallas" if use_pallas else "xla"
+            ids = jnp.arange(tile, dtype=jnp.int32)
+            dense_set = pipeline.RenderSettings(
+                tile_pixels=tile, n_samples=n_samples,
+                use_pallas=use_pallas)
+            culled_set = pipeline.RenderSettings(
+                tile_pixels=tile, n_samples=n_samples,
+                use_pallas=use_pallas, occupancy=True,
+                sample_budget=tile * n_samples // 4)
+            dense_fn = jax.jit(pipeline.make_tile_fn(cfg, dense_set))
+            culled_fn = jax.jit(pipeline.make_tile_fn(cfg, culled_set,
+                                                      with_aux=True))
+            iters = 2 if (use_pallas or small) else 5
+            t_dense = time_fn(dense_fn, params, cam, ids,
+                              warmup=1, iters=iters)
+            t_culled = time_fn(lambda p, c, i: culled_fn(p, c, i)[0],
+                               params, cam, ids, warmup=1, iters=iters)
+            rgb_d = dense_fn(params, cam, ids)
+            rgb_c, aux = culled_fn(params, cam, ids)
+            live, total, dropped = (float(x) for x in aux[0])
+            mse = float(jnp.mean((rgb_d - rgb_c) ** 2))
+            payload = {
+                "app": app, "route": route, "tile_pixels": tile,
+                "n_samples": n_samples,
+                "sample_budget": tile * n_samples // 4,
+                "train_steps": steps,
+                "final_loss": hist[-1][1],
+                "occupied_cell_frac": occ_frac,
+                "live_sample_frac": live / total,
+                "samples_dropped": dropped,
+                "dense_s": t_dense, "culled_s": t_culled,
+                "speedup": t_dense / t_culled,
+                "dense_mpix_per_s": tile / t_dense / 1e6,
+                "culled_mpix_per_s": tile / t_culled / 1e6,
+                "culled_vs_dense_mse": mse,
+                "culled_vs_dense_psnr_db": train.psnr(mse),
+            }
+            csv.add(f"fig14/culled/{app}/{route}", t_culled,
+                    f"speedup={payload['speedup']:.2f}x"
+                    f"_live={payload['live_sample_frac']:.3f}"
+                    f"_psnr={payload['culled_vs_dense_psnr_db']:.1f}dB")
+            csv.add_json(f"fig14_culled_{app}_{route}", payload)

@@ -1,11 +1,37 @@
 """Regenerate the EXPERIMENTS.md roofline table from dryrun.json.
 
   PYTHONPATH=src python benchmarks/make_report.py
-prints the markdown table (stdout); EXPERIMENTS.md embeds the output."""
+prints the markdown table (stdout); EXPERIMENTS.md embeds the output.
+If ``benchmarks/results/BENCH_*.json`` artifacts exist (written by
+``benchmarks/run.py --json-out``), a culled-sampling table is appended."""
 import json
 from pathlib import Path
 
 RESULTS = Path(__file__).parent / "results" / "dryrun.json"
+BENCH_DIR = Path(__file__).parent / "results"
+
+
+def bench_table(bench_dir=BENCH_DIR):
+    """Markdown table of the BENCH_*.json occupancy-culling artifacts
+    (fig14 trained-field rows + serve-engine stream rows, DESIGN.md §7).
+    Returns '' when no artifacts are present."""
+    rows = []
+    for p in sorted(Path(bench_dir).glob("BENCH_*.json")):
+        d = json.loads(p.read_text())
+        psnr = d.get("culled_vs_dense_psnr_db")
+        rows.append(
+            f"| {d.get('bench', p.stem)} | {d.get('app', '')} | "
+            f"{d.get('route', '')} | {d.get('tile_pixels', '')} | "
+            f"{d.get('sample_budget', '')} | "
+            f"{d.get('live_sample_frac', float('nan')):.3f} | "
+            f"{d.get('speedup', float('nan')):.2f}x | "
+            f"{'' if psnr is None else f'{psnr:.1f}'} |")
+    if not rows:
+        return ""
+    head = ["| bench | app | route | tile | budget | live frac | "
+            "speedup | culled-vs-dense PSNR (dB) |",
+            "|---|---|---|---|---|---|---|---|"]
+    return "\n".join(head + rows)
 
 
 def table(mesh_suffix="/single", fields=False):
@@ -47,3 +73,8 @@ if __name__ == "__main__":
     print(table("/multi", fields=False))
     print("\n### Paper apps (batched 2^21-pixel render step)\n")
     print(table("/single", fields=True))
+    bt = bench_table()
+    if bt:
+        print("\n### Occupancy-culled sampling (benchmarks/run.py "
+              "--json-out, DESIGN.md §7)\n")
+        print(bt)

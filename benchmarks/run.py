@@ -1,8 +1,12 @@
 """Benchmark harness — one module per paper table/figure.
 
-  PYTHONPATH=src python -m benchmarks.run [--only fig5,table1]
+  PYTHONPATH=src python -m benchmarks.run [--only fig5,table1] \
+      [--json-out benchmarks/results]
 
-Prints ``name,us_per_call,derived`` CSV."""
+Prints ``name,us_per_call,derived`` CSV. ``--json-out DIR`` additionally
+writes every structured payload (``Csv.add_json``) as
+``DIR/BENCH_<name>.json`` — the artifacts CI uploads and
+``make_report.py`` renders."""
 from __future__ import annotations
 
 import argparse
@@ -33,6 +37,8 @@ def main(argv=None) -> None:
     ap.add_argument("--only", default=None,
                     help="comma-separated subset of: "
                          + ",".join(k for k, _ in MODULES))
+    ap.add_argument("--json-out", default=None,
+                    help="directory for BENCH_<name>.json artifacts")
     args = ap.parse_args(argv)
     only = set(args.only.split(",")) if args.only else None
 
@@ -49,6 +55,9 @@ def main(argv=None) -> None:
             import traceback
             traceback.print_exc()
     csv.emit()
+    if args.json_out:
+        for p in csv.write_json(args.json_out):
+            print(f"wrote {p}")
 
 
 if __name__ == "__main__":

@@ -1,17 +1,25 @@
 """RenderEngine serving benchmark: requests/sec + tail latency of a mixed
 multi-scene, multi-camera stream on one compiled executable per bucket
 (DESIGN.md §3). Emits CSV rows like the fig benchmarks plus one JSON line
-(``serve_engine_json {...}``) with the full engine stats."""
+(``serve_engine_json {...}``) with the full engine stats.
+
+The ``serve_engine/..._culled`` rows serve the same stream through the
+occupancy-culled path (DESIGN.md §7) at ``sample_budget = R*S/4``, with
+the analytic scene's oracle occupancy standing in for a trained grid
+(fig14's culled rows measure the trained-field quality side); the JSON
+payload reports the live-sample fraction next to the dense/culled
+Mpix/s pair."""
 from __future__ import annotations
 
 import json
+import os
 
 import jax
 import numpy as np
 
 from benchmarks.common import Csv, small_field
 from repro.common.param import unbox
-from repro.core import fields, pipeline
+from repro.core import fields, occupancy, pipeline
 from repro.data import scenes
 from repro.serve import RenderEngine, RenderRequest
 
@@ -55,3 +63,72 @@ def run(csv: Csv, n_scenes: int = 2, n_cameras: int = 3,
                 f"_mpixs={st['mpix_per_s']:.2f}"
                 f"_compiles={st['n_traces_total']}")
         print("serve_engine_json " + json.dumps({"bench": name, **st}))
+    run_culled(csv, n_scenes=n_scenes, n_cameras=n_cameras,
+               n_requests=n_requests, tile=tile)
+
+
+def _oracle_occupancy(res: int = 32, threshold: float = 0.01):
+    """Occupancy of the analytic blob scene (the density every benchmark
+    field trains toward) — the sparsity pattern a trained grid carries."""
+    def sigma(p_unit):
+        return scenes.volume_field(p_unit * 4.0 - 2.0)[:, 3]
+    return occupancy.build_occupancy_from_fn(sigma, res=res,
+                                             threshold=threshold)
+
+
+def run_culled(csv: Csv, n_scenes: int = 2, n_cameras: int = 3,
+               n_requests: int = 24, tile: int = 4096):
+    """Dense vs culled serving of the same stream, XLA + Pallas routes."""
+    small = os.environ.get("BENCH_SMALL") == "1"
+    height = width = 128
+    n_samples = 32
+    occ = _oracle_occupancy()
+    for app, use_pallas, tp in (("nvr", False,
+                                 (tile // 16) if small else tile // 4),
+                                ("nvr", True, 64 if small else 128)):
+        cfg = small_field(app, "hash", log2_T=10 if use_pallas else 14)
+        scenes_params = []
+        for s in range(n_scenes):
+            params, _ = unbox(
+                fields.init_field(jax.random.PRNGKey(s), cfg))
+            scenes_params.append(params)
+        cams = [scenes.orbit_camera(height, width, float(a))
+                for a in np.linspace(0.0, 2 * np.pi, n_cameras,
+                                     endpoint=False)]
+        n_req = n_requests if not use_pallas else max(4, n_requests // 4)
+        route = "pallas" if use_pallas else "xla"
+        results = {}
+        for culled in (False, True):
+            settings = pipeline.RenderSettings(
+                tile_pixels=tp, n_samples=n_samples,
+                use_pallas=use_pallas, occupancy=culled,
+                sample_budget=tp * n_samples // 4 if culled else None)
+            engine = RenderEngine(settings)
+            for s, params in enumerate(scenes_params):
+                engine.add_scene(
+                    f"s{s}", cfg,
+                    occupancy.attach(params, occ) if culled else params)
+            engine.warmup()
+            _mixed_stream(engine, engine.scenes(), cams, n_req, tp,
+                          height * width)
+            results["culled" if culled else "dense"] = engine.stats()
+        dense, cull = results["dense"], results["culled"]
+        name = f"serve_engine/{app}_{route}_culled"
+        speedup = cull["mpix_per_s"] / dense["mpix_per_s"]
+        csv.add(name, cull["p50_ms"] / 1e3,
+                f"speedup={speedup:.2f}x"
+                f"_live={cull['live_sample_frac']:.3f}"
+                f"_mpixs={cull['mpix_per_s']:.2f}")
+        csv.add_json(f"serve_engine_culled_{app}_{route}", {
+            "app": app, "route": route, "tile_pixels": tp,
+            "n_samples": n_samples,
+            "sample_budget": tp * n_samples // 4,
+            "n_requests": n_req, "n_scenes": n_scenes,
+            "dense_mpix_per_s": dense["mpix_per_s"],
+            "culled_mpix_per_s": cull["mpix_per_s"],
+            "speedup": speedup,
+            "live_sample_frac": cull["live_sample_frac"],
+            "samples_dropped": cull["samples_dropped"],
+            "dense_p50_ms": dense["p50_ms"],
+            "culled_p50_ms": cull["p50_ms"],
+        })

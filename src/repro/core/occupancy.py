@@ -1,0 +1,204 @@
+"""Binary occupancy grid for empty-space skipping (DESIGN.md §7).
+
+The paper's premise is that encode+MLP dominate application time
+(72%/60%/59%, Fig. 5) — yet a dense ray march pays that cost for every
+one of the ``R x n_samples`` sample points, most of which land in empty
+space or behind an already-opaque surface. ASDR shows adaptive sampling
+is the dominant algorithmic lever for instant-NGP-style rendering;
+ICARUS schedules work per *surviving* sample. On TPU the same win must
+be expressed with static shapes: this module provides the occupancy
+side, ``core/render.render_rays`` the static-budget compaction.
+
+An occupancy grid is a plain pytree (stackable along the serve engine's
+scene axis, gatherable by a traced scene id) with two leaves over the
+``normalize_to_unit`` domain ``[0,1]^3`` at resolution ``res`` (cells
+indexed x-major):
+
+  * ``bits``  — ``(res^3 // 32,)`` uint32 packed bitfield: cell occupied
+    (density above threshold). The VPU-friendly query is an int gather
+    plus a bit test.
+  * ``sigma`` — ``(res^3,)`` float32 coarse density (the pre-threshold
+    field, EMA-maintained by :func:`update_occupancy`). Rays use it for
+    the cheap prefix-transmittance estimate that drives early
+    termination (``render_rays``'s ``early_term_eps``).
+
+Build from a trained field with :func:`build_occupancy` (jitted;
+density sampled at cell centers), refresh during training with the
+EMA-style :func:`update_occupancy` (wired to chunk ends via
+``TrainEngine(on_chunk_end=...)`` — see ``core/train.train_field``'s
+``occupancy_res``), and attach to a scene's params with :func:`attach`
+so the serving stack picks it up as one more stacked leaf.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Callable, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import encoding as enc
+from repro.core import fields
+from repro.core.fields import FieldConfig
+from repro.core.mlp import apply_mlp
+
+
+# ------------------------------------------------------------- bit packing
+def pack_bits(occupied: jnp.ndarray) -> jnp.ndarray:
+    """Boolean ``(n,)`` (n % 32 == 0) -> packed ``(n // 32,)`` uint32.
+
+    Bit ``i`` of word ``w`` is cell ``w * 32 + i`` (little-endian bits)."""
+    n = occupied.shape[0]
+    if n % 32 != 0:
+        raise ValueError(f"pack_bits needs n % 32 == 0, got {n}")
+    b = occupied.reshape(-1, 32).astype(jnp.uint32)
+    shifts = jnp.arange(32, dtype=jnp.uint32)
+    return jnp.sum(b << shifts[None, :], axis=-1, dtype=jnp.uint32)
+
+
+def unpack_bits(bits: jnp.ndarray) -> jnp.ndarray:
+    """Packed ``(w,)`` uint32 -> boolean ``(w * 32,)`` (pack_bits inverse)."""
+    shifts = jnp.arange(32, dtype=jnp.uint32)
+    b = (bits[:, None] >> shifts[None, :]) & jnp.uint32(1)
+    return b.reshape(-1).astype(bool)
+
+
+# ----------------------------------------------------------------- indexing
+def grid_res(occ: Dict[str, jnp.ndarray]) -> int:
+    """Static cell resolution recovered from the sigma leaf's shape."""
+    res = round(occ["sigma"].shape[-1] ** (1.0 / 3.0))
+    if res ** 3 != occ["sigma"].shape[-1]:
+        raise ValueError(f"sigma leaf is not a cube: {occ['sigma'].shape}")
+    return res
+
+
+def _check_res(res: int) -> int:
+    # res % 4 == 0 <=> res^3 % 32 == 0, so the bitfield packs exactly
+    if res % 4 != 0 or res < 4:
+        raise ValueError(f"occupancy res must be a multiple of 4, got {res}")
+    return res
+
+
+def cell_index(points: jnp.ndarray, res: int) -> jnp.ndarray:
+    """Unit-domain points ``(N, 3)`` -> flat cell ids ``(N,)`` (x-major)."""
+    ijk = jnp.clip((points * res).astype(jnp.int32), 0, res - 1)
+    return (ijk[..., 0] * res + ijk[..., 1]) * res + ijk[..., 2]
+
+
+def cell_centers(res: int) -> jnp.ndarray:
+    """``(res^3, 3)`` unit-domain cell centers in ``cell_index`` order."""
+    ax = (jnp.arange(res, dtype=jnp.float32) + 0.5) / res
+    x, y, z = jnp.meshgrid(ax, ax, ax, indexing="ij")
+    return jnp.stack([x, y, z], axis=-1).reshape(-1, 3)
+
+
+# ------------------------------------------------------------------ queries
+def query(occ: Dict[str, jnp.ndarray], points: jnp.ndarray) -> jnp.ndarray:
+    """Occupied? per unit-domain point ``(N, 3)`` -> bool ``(N,)``.
+
+    One int gather + bit test per point (VPU-friendly; no float math)."""
+    flat = cell_index(points, grid_res(occ))
+    word = occ["bits"][flat >> 5]
+    return ((word >> (flat & 31).astype(jnp.uint32)) & jnp.uint32(1)) != 0
+
+
+def query_sigma(occ: Dict[str, jnp.ndarray],
+                points: jnp.ndarray) -> jnp.ndarray:
+    """Coarse density estimate per unit-domain point (nearest cell)."""
+    return occ["sigma"][cell_index(points, grid_res(occ))]
+
+
+def occupied_fraction(occ: Dict[str, jnp.ndarray]) -> float:
+    """Host-side fraction of occupied cells (diagnostics/benchmarks)."""
+    return float(jnp.mean(unpack_bits(occ["bits"])))
+
+
+# -------------------------------------------------------------- field sigma
+def field_sigma(params: Dict, cfg: FieldConfig, points: jnp.ndarray, *,
+                fused: bool = True, use_pallas: bool = False) -> jnp.ndarray:
+    """Density of a trained field at unit-domain points -> ``(N,)``.
+
+    Evaluates only the density path (for nerf: encode + density MLP —
+    the color MLP and the direction input never run)."""
+    if cfg.app == "nerf":
+        if use_pallas:
+            from repro.kernels.fused_field import ops as ff_ops
+            dfeat = ff_ops.field(points, params["grid"],
+                                 params["density_mlp"], cfg.grid,
+                                 cfg.density_mlp)
+        else:
+            h = enc.grid_encode(points, params["grid"], cfg.grid)
+            dfeat = apply_mlp(params["density_mlp"], h, cfg.density_mlp)
+        return jnp.exp(dfeat[:, 0])
+    if cfg.app == "nvr":
+        out = fields.apply_field(params, cfg, points, fused=fused,
+                                 use_pallas=use_pallas)
+        return out[:, 3]
+    raise ValueError(
+        f"occupancy culling applies to the ray-marched apps (nerf/nvr), "
+        f"got {cfg.app!r}")
+
+
+# ------------------------------------------------------------- build/update
+@functools.partial(jax.jit,
+                   static_argnames=("cfg", "res", "fused", "use_pallas"))
+def build_occupancy(params: Dict, cfg: FieldConfig, *, res: int = 64,
+                    threshold: float = 0.01, fused: bool = True,
+                    use_pallas: bool = False) -> Dict[str, jnp.ndarray]:
+    """Occupancy grid of a trained field by density thresholding.
+
+    Samples the field's density at the ``res^3`` cell centers of the
+    unit domain; a cell is occupied iff ``sigma > threshold``. Returns
+    ``{'bits': uint32 (res^3/32,), 'sigma': f32 (res^3,)}``."""
+    _check_res(res)
+    sigma = field_sigma(params, cfg, cell_centers(res), fused=fused,
+                        use_pallas=use_pallas).astype(jnp.float32)
+    return {"bits": pack_bits(sigma > threshold), "sigma": sigma}
+
+
+@functools.partial(jax.jit, static_argnames=("fn", "res"))
+def build_occupancy_from_fn(fn: Callable, *, res: int = 64,
+                            threshold: float = 0.01
+                            ) -> Dict[str, jnp.ndarray]:
+    """Like :func:`build_occupancy` but from any density fn
+    ``(N, 3) unit points -> (N,) sigma`` (analytic oracles, tests)."""
+    _check_res(res)
+    sigma = fn(cell_centers(res)).reshape(-1).astype(jnp.float32)
+    return {"bits": pack_bits(sigma > threshold), "sigma": sigma}
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("cfg", "res", "fused", "use_pallas"))
+def update_occupancy(occ: Dict[str, jnp.ndarray], params: Dict,
+                     cfg: FieldConfig, *, decay: float = 0.95,
+                     threshold: float = 0.01, res: Optional[int] = None,
+                     fused: bool = True, use_pallas: bool = False
+                     ) -> Dict[str, jnp.ndarray]:
+    """EMA-style refresh during training (instant-NGP's grid update):
+    ``sigma <- max(decay * sigma, sigma_now)``, then re-threshold.
+
+    The max keeps cells that were recently dense from flickering off
+    between refreshes while ``decay`` lets stale density fade; usable
+    from the train engine at chunk ends (``TrainEngine(on_chunk_end)``).
+    ``res`` is taken from ``occ`` (pass it only for shape checking)."""
+    r = grid_res(occ) if res is None else _check_res(res)
+    fresh = field_sigma(params, cfg, cell_centers(r), fused=fused,
+                        use_pallas=use_pallas).astype(jnp.float32)
+    sigma = jnp.maximum(decay * occ["sigma"], fresh)
+    return {"bits": pack_bits(sigma > threshold), "sigma": sigma}
+
+
+# ------------------------------------------------------------------ helpers
+def all_occupied(res: int = 64) -> Dict[str, jnp.ndarray]:
+    """Everything-occupied grid with a zero density estimate: culling
+    becomes an exact no-op (no skip, no early termination) — the parity
+    baseline the culling-off tests pin bit-for-bit."""
+    _check_res(res)
+    return {"bits": jnp.full((res ** 3 // 32,), 0xFFFFFFFF, jnp.uint32),
+            "sigma": jnp.zeros((res ** 3,), jnp.float32)}
+
+
+def attach(params: Dict, occ: Dict[str, jnp.ndarray]) -> Dict:
+    """Scene params + occupancy as one more leaf (stacks/gathers with the
+    tables through the serve engine's scene axis)."""
+    return {**params, "occupancy": occ}

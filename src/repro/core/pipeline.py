@@ -31,6 +31,24 @@ class RenderSettings:
     fused: bool = True            # False = GPU-baseline DRAM round trip
     use_pallas: bool = False      # route encode+MLP through the NFP kernel
     sphere_steps: int = 48        # NSDF sphere tracing iterations
+    # Occupancy-culled sampling (DESIGN.md §7). ``occupancy=True`` makes
+    # the ray apps read the scene's ``params['occupancy']`` grid and
+    # march through the static-budget compaction in render.render_rays.
+    # ``sample_budget`` is the field-evaluation budget for a FULL tile
+    # of ``tile_pixels`` rays (None = tile_pixels * n_samples, i.e. the
+    # dense cost — culling is then exact); tile fns traced at a smaller
+    # pixel count (sharding, direct calls) scale it proportionally.
+    occupancy: bool = False
+    sample_budget: Optional[int] = None
+    early_term_eps: float = 1e-3  # kill samples once T_est < eps
+
+    def tile_budget(self, n_pixels: int) -> Optional[int]:
+        """Static budget for a tile fn traced at ``n_pixels`` rays."""
+        if not self.occupancy:
+            return None
+        if self.sample_budget is None:
+            return n_pixels * self.n_samples
+        return max(1, self.sample_budget * n_pixels // self.tile_pixels)
 
 
 def field_eval_fn(cfg: FieldConfig, settings: RenderSettings) -> Callable:
@@ -81,28 +99,62 @@ def shade_nsdf(params, cfg: FieldConfig, origins, dirs,
 
 
 # ---------------------------------------------------------------- tile step
-def make_tile_fn(cfg: FieldConfig, settings: RenderSettings) -> Callable:
+def make_tile_fn(cfg: FieldConfig, settings: RenderSettings,
+                 with_aux: bool = False) -> Callable:
     """(params, cam, pixel_ids (P,)) -> rgb (P, 3): one schedulable tile.
 
     The camera is *data* (a pytree argument), not part of the trace — one
     compiled tile fn serves every viewpoint/resolution of a
-    ``(app, encoding, tile_pixels, n_samples, dtype)`` bucket."""
+    ``(app, encoding, tile_pixels, n_samples, dtype)`` bucket.
+
+    With ``settings.occupancy`` the ray apps march occupancy-culled on
+    ``params['occupancy']`` under ``settings.tile_budget`` (DESIGN.md
+    §7); ``with_aux=True`` additionally returns a ``(1, 3)`` float32
+    ``[n_live, n_total, n_dropped]`` row so the serve engine can report
+    the live-sample fraction (non-ray apps and the dense path report
+    all-live)."""
     feval = field_eval_fn(cfg, settings)
+    ray_app = cfg.app in ("nerf", "nvr")
 
     def tile(params, cam, pixel_ids):
+        n_pix = pixel_ids.shape[0]
+
+        def with_dense_aux(rgb, n):
+            aux = jnp.stack([jnp.float32(n), jnp.float32(n),
+                             jnp.float32(0)])[None, :]
+            return (rgb, aux) if with_aux else rgb
+
         if cfg.app == "gia":
             w_i = cam.intrinsics[1].astype(jnp.int32)
             py = (pixel_ids // w_i).astype(jnp.float32) / cam.height
             px = (pixel_ids % w_i).astype(jnp.float32) / cam.width
-            return feval(params, jnp.stack([px, py], axis=-1))
+            return with_dense_aux(
+                feval(params, jnp.stack([px, py], axis=-1)), n_pix)
         origins, dirs = render.make_rays(cam, pixel_ids)
         if cfg.app == "nsdf":
-            return shade_nsdf(params, cfg, origins, dirs, settings)
-        return render.render_rays(
+            return with_dense_aux(
+                shade_nsdf(params, cfg, origins, dirs, settings), n_pix)
+        occ = None
+        if settings.occupancy:
+            if "occupancy" not in params:
+                raise ValueError(
+                    "RenderSettings.occupancy=True but the scene params "
+                    "have no 'occupancy' leaf — build one with "
+                    "core.occupancy.build_occupancy and attach()")
+            occ = params["occupancy"]
+        rgb, aux = render.render_rays(
             lambda p, d: feval(params, p, d), origins, dirs,
             near=settings.near, far=settings.far,
             n_samples=settings.n_samples,
-            use_pallas_composite=settings.use_pallas)
+            use_pallas_composite=settings.use_pallas,
+            occupancy=occ, sample_budget=settings.tile_budget(n_pix),
+            early_term_eps=settings.early_term_eps, return_aux=True)
+        if not with_aux:
+            return rgb
+        row = jnp.stack([aux["n_live"].astype(jnp.float32),
+                         jnp.float32(n_pix * settings.n_samples),
+                         aux["n_dropped"].astype(jnp.float32)])[None, :]
+        return rgb, row
     return tile
 
 
@@ -124,13 +176,14 @@ def select_scene(stacked_params, scene_id) -> Dict:
         stacked_params)
 
 
-def make_multi_scene_tile_fn(cfg: FieldConfig,
-                             settings: RenderSettings) -> Callable:
+def make_multi_scene_tile_fn(cfg: FieldConfig, settings: RenderSettings,
+                             with_aux: bool = False) -> Callable:
     """(stacked_params, scene_id, cam, pixel_ids) -> rgb (P, 3).
 
     Everything request-dependent (scene id, camera, pixel ids) is traced
-    data; everything compiled (field graph, kernel schedule) is shared."""
-    tile = make_tile_fn(cfg, settings)
+    data; everything compiled (field graph, kernel schedule) is shared.
+    ``with_aux`` adds the live-sample row (see :func:`make_tile_fn`)."""
+    tile = make_tile_fn(cfg, settings, with_aux=with_aux)
 
     def mtile(stacked_params, scene_id, cam, pixel_ids):
         return tile(select_scene(stacked_params, scene_id), cam, pixel_ids)
@@ -139,20 +192,31 @@ def make_multi_scene_tile_fn(cfg: FieldConfig,
 
 def render_frame(params, cfg: FieldConfig, cam: render.Camera,
                  settings: Optional[RenderSettings] = None) -> jnp.ndarray:
-    """Render a full frame as a scan over tiles (NGPC batch pipeline)."""
+    """Render a full frame as a scan over tiles (NGPC batch pipeline).
+
+    Tail padding uses the serve engine's convention (DESIGN.md §3):
+    pad lanes carry pixel id 0 with ``mask=False`` and are zeroed, not
+    wrapped ids re-rendering arbitrary live pixels — the frame's work is
+    the valid pixels plus an explicit, masked pad, the one padding story
+    both paths share."""
     settings = settings or RenderSettings()
     height, width = cam.resolution
     n_pixels = height * width
     tp = settings.tile_pixels
     n_tiles = -(-n_pixels // tp)
     padded = n_tiles * tp
-    ids = jnp.arange(padded, dtype=jnp.int32) % n_pixels
+    ids = jnp.zeros(padded, dtype=jnp.int32).at[:n_pixels].set(
+        jnp.arange(n_pixels, dtype=jnp.int32))
+    mask = jnp.arange(padded) < n_pixels
     tiles = ids.reshape(n_tiles, tp)
+    masks = mask.reshape(n_tiles, tp)
     tile_fn = make_tile_fn(cfg, settings)
 
-    def body(carry, pixel_ids):
-        return carry, tile_fn(params, cam, pixel_ids)
-    _, rgb = jax.lax.scan(body, 0, tiles)
+    def body(carry, xs):
+        pixel_ids, m = xs
+        return carry, jnp.where(m[:, None],
+                                tile_fn(params, cam, pixel_ids), 0.0)
+    _, rgb = jax.lax.scan(body, 0, (tiles, masks))
     rgb = rgb.reshape(padded, 3)[:n_pixels]
     return rgb.reshape(height, width, 3)
 

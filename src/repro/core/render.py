@@ -7,12 +7,20 @@ sampling+compositing explicitly for the TPU path.
 
 Compositing follows classical emission-absorption volume rendering
 (paper refs [7], [11], [40]): alpha_i = 1 - exp(-sigma_i * dt_i),
-T_i = prod_{j<i}(1 - alpha_j), C = sum_i T_i * alpha_i * c_i.
+T_i = prod_{j<i}(1 - alpha_j), C = sum_i T_i * alpha_i * c_i. The XLA
+and Pallas composites share one transmittance formulation —
+``exp(cumsum(-sigma*dt))`` — so the two routes agree bit-for-bit.
+
+``render_rays`` optionally runs occupancy-culled: samples in empty
+space or behind an opaque prefix are compacted away and only a *static*
+sample budget reaches the (dominant) encode+MLP cost — see
+``core/occupancy.py`` and DESIGN.md §7 for the contract.
 """
 from __future__ import annotations
 
 import dataclasses
-from typing import Callable, Optional, Tuple
+import math
+from typing import Callable, Dict, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -134,11 +142,18 @@ def composite(rgb: jnp.ndarray, sigma: jnp.ndarray, dts: jnp.ndarray
     """Emission-absorption integration.
 
     rgb (R, S, 3), sigma (R, S), dts (R, S) -> (pixel (R, 3), opacity (R,)).
+
+    Transmittance is realized as ``exp(cumsum(-sigma*dt))`` — the exact
+    formulation of the Pallas ``ray_march`` kernel (cumsum is the
+    TPU-native scan primitive; since ``1-alpha == exp(-sigma*dt)``
+    exactly, no ``log`` call and no epsilon are needed, and opaque
+    samples stay finite). Keeping one formulation on both routes makes
+    the XLA/Pallas composite parity bit-for-bit instead of
+    epsilon-noise-tolerant.
     """
     alpha = 1.0 - jnp.exp(-sigma * dts)                       # (R, S)
-    trans = jnp.cumprod(1.0 - alpha + 1e-10, axis=-1)
-    trans = jnp.concatenate(
-        [jnp.ones_like(trans[:, :1]), trans[:, :-1]], axis=-1)
+    log1m = -sigma * dts                                      # log(1-alpha)
+    trans = jnp.exp(jnp.cumsum(log1m, axis=-1) - log1m)       # excl. scan
     w = trans * alpha                                          # (R, S)
     pixel = jnp.sum(w[..., None] * rgb, axis=-2)
     return pixel, jnp.sum(w, axis=-1)
@@ -151,24 +166,97 @@ def normalize_to_unit(points: jnp.ndarray, lo: float = -2.0,
     return jnp.clip((points - lo) / (hi - lo), 0.0, 1.0)
 
 
+def _cull_mask(occupancy: Dict, unit_pts: jnp.ndarray, dts: jnp.ndarray,
+               early_term_eps: float) -> jnp.ndarray:
+    """Live mask (R, S): occupied cell AND prefix still transmissive.
+
+    (a) Empty-space skip: a sample whose occupancy cell is empty is dead.
+    (b) Early termination: a cheap prefix-transmittance *estimate* from
+    the grid's coarse sigma (``T_est = exp(-cumsum(sigma_est*dt))``,
+    exclusive) marks samples behind an already-opaque prefix dead. Both
+    are VPU-cheap (int gather + bit test, one float gather + cumsum) —
+    no field evaluation happens before the mask."""
+    from repro.core import occupancy as occ_mod
+    r, s, _ = unit_pts.shape
+    flat = unit_pts.reshape(-1, 3)
+    live = occ_mod.query(occupancy, flat).reshape(r, s)
+    sig_est = occ_mod.query_sigma(occupancy, flat).reshape(r, s)
+    od = sig_est * dts                         # per-sample optical depth
+    acc = jnp.cumsum(od, axis=-1) - od         # exclusive prefix
+    return live & (acc < -math.log(early_term_eps))
+
+
 def render_rays(field_apply: Callable, origins: jnp.ndarray,
                 dirs: jnp.ndarray, *, near: float = 0.5, far: float = 4.5,
                 n_samples: int = 32, rng: Optional[jax.Array] = None,
-                use_pallas_composite: bool = False) -> jnp.ndarray:
+                use_pallas_composite: bool = False,
+                occupancy: Optional[Dict] = None,
+                sample_budget: Optional[int] = None,
+                early_term_eps: float = 1e-3,
+                return_aux: bool = False):
     """Full per-ray pipeline: sample -> field -> composite. (R,) rays.
 
     ``field_apply(points (N,3), dirs (N,3)) -> (N, 4) [rgb, sigma]``.
+
+    With ``occupancy`` (a ``core/occupancy.py`` grid) the march is
+    *culled*: dead samples — empty cell, or prefix already opaque — are
+    partitioned behind live ones by a stable argsort on the dead mask
+    (fixed shape, no host sync), the field evaluates only a **static**
+    ``sample_budget``-sample prefix (default ``R*S``: exactly the dense
+    cost), and results scatter back with dead samples forced to
+    ``sigma = 0`` before compositing. If live samples exceed the budget
+    the *farthest* ones fall off the prefix first (near samples
+    dominate the emission-absorption integral) and ``aux['n_dropped']``
+    reports the overflow — degradation is graceful and observable,
+    never silent. With occupancy ``None`` the dense path runs
+    unchanged; with an all-occupied grid and a full budget the culled
+    path is bit-identical to it (DESIGN.md §7).
+
+    ``return_aux`` additionally returns ``{'n_live', 'n_budget',
+    'n_dropped'}`` (traced int32 scalars; ``n_budget`` is the static
+    evaluation count).
     """
     n_rays = origins.shape[0]
     pts, dts = sample_along_rays(origins, dirs, near, far, n_samples, rng)
     flat_pts = normalize_to_unit(pts.reshape(-1, 3))
     flat_dirs = jnp.repeat(dirs, n_samples, axis=0)
-    out = field_apply(flat_pts, flat_dirs)                 # (R*S, 4)
-    out = out.reshape(n_rays, n_samples, 4)
-    rgb, sigma = out[..., :3], out[..., 3]
+    n_total = n_rays * n_samples
+
+    if occupancy is None:
+        out = field_apply(flat_pts, flat_dirs)             # (R*S, 4)
+        out = out.reshape(n_rays, n_samples, 4)
+        rgb, sigma = out[..., :3], out[..., 3]
+        aux = {"n_live": jnp.int32(n_total), "n_budget": n_total,
+               "n_dropped": jnp.int32(0)}
+    else:
+        budget = (n_total if sample_budget is None
+                  else max(1, min(int(sample_budget), n_total)))
+        live = _cull_mask(occupancy, flat_pts.reshape(
+            n_rays, n_samples, 3), dts, early_term_eps)    # (R, S)
+        # Drop-order key: live samples first, ordered near-to-far (the
+        # march index s), dead last — so budget overflow sheds the
+        # farthest live samples first. Stable sort keeps ray order
+        # within a depth slice deterministic.
+        s_idx = jnp.broadcast_to(
+            jnp.arange(n_samples, dtype=jnp.int32)[None, :],
+            (n_rays, n_samples))
+        key = jnp.where(live, s_idx, s_idx + n_samples).reshape(-1)
+        order = jnp.argsort(key, stable=True)              # (R*S,)
+        sel = order[:budget]                               # static shape
+        out_sel = field_apply(flat_pts[sel], flat_dirs[sel])  # (budget, 4)
+        out = jnp.zeros((n_total, 4), out_sel.dtype).at[sel].set(out_sel)
+        out = out.reshape(n_rays, n_samples, 4)
+        rgb = out[..., :3]
+        # dead-in-budget samples carry garbage -> force transparent;
+        # live-beyond-budget samples were never written -> already 0.
+        sigma = jnp.where(live, out[..., 3], 0.0)
+        n_live = jnp.sum(live, dtype=jnp.int32)
+        aux = {"n_live": n_live, "n_budget": budget,
+               "n_dropped": jnp.maximum(n_live - budget, 0)}
+
     if use_pallas_composite:
         from repro.kernels.ray_march import ops as rm_ops
         pixel, _ = rm_ops.composite(rgb, sigma, dts)
     else:
         pixel, _ = composite(rgb, sigma, dts)
-    return pixel
+    return (pixel, aux) if return_aux else pixel

@@ -108,7 +108,11 @@ def train_field(cfg: FieldConfig, steps: int = 200, batch_size: int = 2048,
                 compression_topk: float = 0.05,
                 mesh=None, rules=None,
                 on_metrics: Optional[Callable] = None,
-                n_samples: Optional[int] = None, gt_samples: int = 64):
+                n_samples: Optional[int] = None, gt_samples: int = 64,
+                occupancy_res: Optional[int] = None,
+                occupancy_every: int = 1,
+                occupancy_threshold: float = 0.01,
+                occupancy_decay: float = 0.95):
     """End-to-end field training against the analytic scene, on the
     shared engine.
 
@@ -120,12 +124,40 @@ def train_field(cfg: FieldConfig, steps: int = 200, batch_size: int = 2048,
     compression of the hash-table gradient, and data-parallel
     ``shard_map`` over the ``field_batch`` mesh axes. ``on_metrics``
     receives every step's full metrics row (loss, psnr, lr, dt).
+
+    Passing ``occupancy_res`` (nerf/nvr only) maintains an occupancy
+    grid (DESIGN.md §7) off the engine's ``on_chunk_end`` hook: built
+    fresh at the first chunk end, EMA-refreshed every
+    ``occupancy_every`` chunk ends after that, and attached to the
+    returned params as the ``'occupancy'`` leaf — ready for
+    ``RenderSettings(occupancy=True)`` serving. The grid lives outside
+    the scanned/donated training state (no optimizer moments for it).
     """
+    from repro.core import occupancy as occ_mod
+
+    if occupancy_res is not None and cfg.app not in ("nerf", "nvr"):
+        raise ValueError("occupancy_res is only meaningful for the ray "
+                         f"apps (nerf/nvr), not app={cfg.app!r}")
     k_init, k_data = _data_keys(seed)
     params, _spec = unbox(fields.init_field(k_init, cfg))
     state = loop.init_train_state(params, compression=compression)
     opt_cfg = opt_cfg or optim.AdamConfig(lr=1e-2)
     cam = scenes.default_camera() if cfg.app in ("nerf", "nvr") else None
+
+    occ_box = {"occ": None, "chunks": 0}
+
+    def _refresh_occupancy(end, st):
+        occ_box["chunks"] += 1
+        if occ_box["occ"] is None:
+            occ_box["occ"] = occ_mod.build_occupancy(
+                st["params"], cfg, res=occupancy_res,
+                threshold=occupancy_threshold, fused=fused,
+                use_pallas=use_pallas)
+        elif occ_box["chunks"] % occupancy_every == 0:
+            occ_box["occ"] = occ_mod.update_occupancy(
+                occ_box["occ"], st["params"], cfg,
+                decay=occupancy_decay, threshold=occupancy_threshold,
+                fused=fused, use_pallas=use_pallas)
 
     step_fn = loop.make_scanned_step(
         lambda p, b: field_loss(p, cfg, b, fused=fused,
@@ -139,7 +171,9 @@ def train_field(cfg: FieldConfig, steps: int = 200, batch_size: int = 2048,
         step_fn,
         device_batch_fn=lambda step: make_batch(
             cfg, jax.random.fold_in(k_data, step), batch_size, cam,
-            gt_samples=gt_samples))
+            gt_samples=gt_samples),
+        on_chunk_end=(_refresh_occupancy if occupancy_res is not None
+                      else None))
 
     history = []
 
@@ -152,7 +186,10 @@ def train_field(cfg: FieldConfig, steps: int = 200, batch_size: int = 2048,
             on_metrics(i, row, st)
 
     state, _ = engine.run(state, on_metrics=_on_metrics)
-    return state["params"], history
+    out_params = state["params"]
+    if occ_box["occ"] is not None:
+        out_params = occ_mod.attach(out_params, occ_box["occ"])
+    return out_params, history
 
 
 def train_field_reference(cfg: FieldConfig, steps: int = 200,

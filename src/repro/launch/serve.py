@@ -25,10 +25,16 @@ def serve_render(app: str = "gia", encoding: str = "hash",
                  train_steps: int = 150, n_requests: int = 8,
                  tile_pixels: int = 4096, height: int = 128,
                  width: int = 128, use_pallas: bool = False, seed: int = 0,
-                 n_scenes: int = 2, n_cameras: int = 3, shard: bool = False):
+                 n_scenes: int = 2, n_cameras: int = 3, shard: bool = False,
+                 occupancy: bool = False,
+                 sample_budget: int | None = None):
     """Train ``n_scenes`` small fields, then serve a mixed request stream
     (scenes x viewpoints) through the RenderEngine — one compiled
-    executable for the whole bucket, warmup excluded from latency stats."""
+    executable for the whole bucket, warmup excluded from latency stats.
+
+    ``occupancy`` serves the ray apps occupancy-culled (DESIGN.md §7):
+    training maintains the grid at chunk ends, the engine compacts to
+    ``sample_budget`` samples per tile (default: the dense count)."""
     import dataclasses
     from repro.core import pipeline
     from repro.core.train import train_field
@@ -38,6 +44,9 @@ def serve_render(app: str = "gia", encoding: str = "hash",
     if n_scenes < 1 or n_cameras < 1:
         raise ValueError(f"need >=1 scene and >=1 camera "
                          f"(got {n_scenes}, {n_cameras})")
+    if occupancy and app not in ("nerf", "nvr"):
+        raise ValueError(f"--occupancy needs a ray-marched app (nerf/nvr),"
+                         f" got {app!r}")
     base = registry.field_config(app, encoding)
     # laptop-scale table for the local server (with_grid recomputes the
     # dependent MLP dims — including nerf's density MLP)
@@ -45,14 +54,17 @@ def serve_render(app: str = "gia", encoding: str = "hash",
         dataclasses.replace(base.grid, log2_table_size=14))
 
     settings = pipeline.RenderSettings(tile_pixels=tile_pixels,
-                                       use_pallas=use_pallas)
+                                       use_pallas=use_pallas,
+                                       occupancy=occupancy,
+                                       sample_budget=sample_budget)
     mesh = make_local_mesh() if shard else None
     engine = RenderEngine(settings, mesh=mesh)
     for s in range(n_scenes):
         print(f"[serve] training scene {s} ({cfg.name}) "
               f"for {train_steps} steps...")
-        params, hist = train_field(cfg, steps=train_steps, batch_size=4096,
-                                   seed=seed + s)
+        params, hist = train_field(
+            cfg, steps=train_steps, batch_size=4096, seed=seed + s,
+            occupancy_res=32 if occupancy else None)
         print(f"[serve] scene {s} trained: "
               f"loss {hist[0][1]:.4f} -> {hist[-1][1]:.4f}")
         engine.add_scene(f"scene{s}", cfg, params)
@@ -79,6 +91,11 @@ def serve_render(app: str = "gia", encoding: str = "hash",
           f"p50 {stats['p50_ms']:.1f}ms p99 {stats['p99_ms']:.1f}ms "
           f"{stats['mpix_per_s']:.2f} Mpix/s "
           f"(compiles: {stats['n_traces_total']})")
+    if occupancy:
+        print(f"[serve] occupancy culling: "
+              f"live fraction {stats['live_sample_frac']:.3f}, "
+              f"{stats['samples_dropped']:.0f} samples dropped, "
+              f"effective {stats['effective_mpix_per_s']:.2f} Mpix/s")
     med_s = stats["p50_ms"] / 1e3
     print(f"[serve] 4k frame budget needs "
           f"{3840 * 2160 / tile_pixels * med_s * 1e3:.0f}ms/frame")
@@ -162,13 +179,20 @@ def main(argv=None):
     ap.add_argument("--cameras", type=int, default=3)
     ap.add_argument("--shard", action="store_true",
                     help="pixel-parallel shard_map over the local mesh")
+    ap.add_argument("--occupancy", action="store_true",
+                    help="occupancy-culled sampling (ray apps)")
+    ap.add_argument("--sample-budget", type=int, default=None,
+                    help="static field-eval budget per tile (default: "
+                         "tile_pixels * n_samples, the dense count)")
     args = ap.parse_args(argv)
     if args.mode == "render":
         serve_render(args.app, args.encoding, use_pallas=args.use_pallas,
                      train_steps=args.train_steps, n_requests=args.requests,
                      tile_pixels=args.tile_pixels, height=args.height,
                      width=args.width, n_scenes=args.scenes,
-                     n_cameras=args.cameras, shard=args.shard)
+                     n_cameras=args.cameras, shard=args.shard,
+                     occupancy=args.occupancy,
+                     sample_budget=args.sample_budget)
     else:
         serve_lm(args.arch, args.reduced)
 

@@ -23,6 +23,12 @@ per-request batch, not the frame. This engine is that idea on TPU/XLA:
   * **Optional pixel-parallel sharding.** With a mesh, the megabatch's
     pixel axis shard_maps over the 'field_batch' axes of the shared
     partitioning rules (repro.serve.sharding).
+  * **Occupancy-culled sampling.** With ``settings.occupancy`` the ray
+    apps march through the static-budget compaction (DESIGN.md §7):
+    scenes carry an ``occupancy`` grid leaf (stacked like the tables),
+    the bucket key grows ``(occupancy, sample_budget)`` (the budget
+    changes the traced shapes), and ``stats()`` reports the live-sample
+    fraction and dropped-sample count next to the effective Mpix/s.
 
 Register all scenes, then ``warmup()`` (compiles each bucket once, outside
 the latency statistics), then submit the mixed request stream.
@@ -55,13 +61,17 @@ class BucketKey:
     graph — land in distinct buckets rather than colliding. ``dtype`` is
     the ordered tuple of param-leaf dtypes (mixed-precision scenes, e.g.
     bf16 tables + f32 MLPs, must not stack with all-f32 ones —
-    ``jnp.stack`` would silently promote)."""
+    ``jnp.stack`` would silently promote). ``occupancy``/``sample_budget``
+    change the traced shapes (the compaction's static prefix, DESIGN.md
+    §7), so different budgets must never collide on one executable."""
     app: str
     encoding: str
     tile_pixels: int
     n_samples: int
     dtype: str
     cfg: FieldConfig
+    occupancy: bool = False
+    sample_budget: Optional[int] = None
 
 
 @dataclasses.dataclass(frozen=True)
@@ -92,12 +102,13 @@ class Ticket:
             return True
 
     def __init__(self, engine: "RenderEngine", out, n_valid: int,
-                 t_submit: float, warmup: bool):
+                 t_submit: float, warmup: bool, aux=None):
         self._engine = engine
         self._out = out
         self._n = n_valid
         self._t_submit = t_submit
         self._warmup = warmup
+        self._aux = aux              # (k, 3) [live, total, dropped] rows
         self._res: Optional[np.ndarray] = None
         self._done = False
 
@@ -108,6 +119,9 @@ class Ticket:
             self.latency_s = t_done - self._t_submit
             if not self._warmup:
                 self._engine._record(self.latency_s, self._n, t_done)
+                if self._aux is not None:
+                    self._engine._record_aux(
+                        np.asarray(self._aux).sum(axis=0))
             self._res = np.asarray(self._out)[:self._n]
             self._done = True
         return self._res
@@ -139,6 +153,7 @@ class RenderEngine:
                 raise ValueError(
                     f"tile_pixels={self.settings.tile_pixels} not divisible"
                     f" by the mesh's {shards} pixel shards")
+            sharding.check_sample_budget(self.settings, shards)
         self._buckets: Dict[BucketKey, _Bucket] = {}
         self._scene_bucket: Dict[str, BucketKey] = {}
         self._inflight: collections.deque = collections.deque()
@@ -147,6 +162,9 @@ class RenderEngine:
         self._t_first: Optional[float] = None
         self._t_last: Optional[float] = None
         self._warmup_s = 0.0
+        # culled-sampling aggregates (occupancy buckets only):
+        # [live, total, dropped] sample counts over the serving window
+        self._samples = np.zeros(3, np.float64)
 
     # ------------------------------------------------------------- scenes
     def add_scene(self, name: str, cfg: FieldConfig, params) -> BucketKey:
@@ -160,10 +178,17 @@ class RenderEngine:
         # ordered per-leaf dtypes (tree order is deterministic given cfg):
         # a bf16-table+f32-MLP scene must not collide with f32-table+bf16-MLP
         dtype = ",".join(str(l.dtype) for l in jax.tree.leaves(params))
+        if (self.settings.occupancy and cfg.app in ("nerf", "nvr")
+                and "occupancy" not in params):
+            raise ValueError(
+                f"engine settings have occupancy=True but scene {name!r} "
+                "has no 'occupancy' leaf — build one with "
+                "core.occupancy.build_occupancy and attach()")
         key = BucketKey(app=cfg.app, encoding=cfg.grid.kind,
                         tile_pixels=self.settings.tile_pixels,
                         n_samples=self.settings.n_samples, dtype=dtype,
-                        cfg=cfg)
+                        cfg=cfg, occupancy=self.settings.occupancy,
+                        sample_budget=self.settings.sample_budget)
         bucket = self._buckets.get(key)
         if bucket is None:
             bucket = self._buckets[key] = _Bucket(cfg, key)
@@ -187,16 +212,21 @@ class RenderEngine:
     def _get_fn(self, key: BucketKey):
         bucket = self._buckets[key]
         if bucket.fn is None:
-            mtile = pipeline.make_multi_scene_tile_fn(bucket.cfg,
-                                                      self.settings)
+            with_aux = self.settings.occupancy
+            mtile = pipeline.make_multi_scene_tile_fn(
+                bucket.cfg, self.settings, with_aux=with_aux)
 
             def fn(stacked, scene_id, cam, pixel_ids, mask):
                 bucket.n_traces += 1     # python side effect: counts traces
-                rgb = mtile(stacked, scene_id, cam, pixel_ids)
-                return jnp.where(mask[:, None], rgb, 0.0)
+                out = mtile(stacked, scene_id, cam, pixel_ids)
+                if with_aux:
+                    rgb, aux = out
+                    return jnp.where(mask[:, None], rgb, 0.0), aux
+                return jnp.where(mask[:, None], out, 0.0)
 
             if self.mesh is not None:
-                fn = sharding.shard_tile_fn(fn, self.mesh, self.rules)
+                fn = sharding.shard_tile_fn(fn, self.mesh, self.rules,
+                                            with_aux=with_aux)
             bucket.fn = jax.jit(fn)
         return bucket.fn
 
@@ -238,7 +268,10 @@ class RenderEngine:
             self._t_first = t0
         out = fn(stacked, sid, req.camera, jnp.asarray(padded),
                  jnp.asarray(mask))
-        ticket = Ticket(self, out, n, t0, warmup=_warmup)
+        aux = None
+        if self.settings.occupancy:
+            out, aux = out
+        ticket = Ticket(self, out, n, t0, warmup=_warmup, aux=aux)
         self._inflight.append(ticket)
         # retire already-finished work first so its recorded latency is
         # the device completion, not however long the caller sat on it
@@ -272,6 +305,9 @@ class RenderEngine:
         self._pixels += n_pixels
         self._t_last = t_done
 
+    def _record_aux(self, row: np.ndarray):
+        self._samples += row
+
     def trace_counts(self) -> Dict[BucketKey, int]:
         return {k: b.n_traces for k, b in self._buckets.items()}
 
@@ -290,12 +326,21 @@ class RenderEngine:
         wall = ((self._t_last - self._t_first)
                 if self._t_first is not None and self._t_last is not None
                 else 0.0)
+        live, total, dropped = self._samples
+        # effective Mpix/s is the *served* throughput — with culling on,
+        # the same wall clock serves more pixels, so the win shows up
+        # here directly; live_sample_frac explains where it came from.
+        mpix = (self._pixels / wall / 1e6) if wall > 0 else float("nan")
         return {
             "n_requests": len(lat),
             "p50_ms": pct(50) * 1e3,
             "p99_ms": pct(99) * 1e3,
-            "mpix_per_s": (self._pixels / wall / 1e6) if wall > 0
+            "mpix_per_s": mpix,
+            "effective_mpix_per_s": mpix,
+            "live_sample_frac": (live / total) if total > 0
             else float("nan"),
+            "samples_total": total,
+            "samples_dropped": dropped,
             "requests_per_s": (len(lat) / wall) if wall > 0
             else float("nan"),
             "wall_s": wall,
@@ -305,7 +350,9 @@ class RenderEngine:
             "buckets": {
                 f"{k.app}/{k.encoding}/tp{k.tile_pixels}/s{k.n_samples}"
                 f"/{k.dtype}/T{k.cfg.grid.log2_table_size}"
-                f"L{k.cfg.grid.n_levels}#{i}": {
+                f"L{k.cfg.grid.n_levels}"
+                + (f"/occ-bgt{k.sample_budget}" if k.occupancy else "")
+                + f"#{i}": {
                     "n_traces": b.n_traces, "n_scenes": len(b.order)}
                 for i, (k, b) in enumerate(self._buckets.items())},
         }

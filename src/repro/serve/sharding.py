@@ -37,14 +37,37 @@ def pixel_shard_count(mesh: Mesh,
     return math.prod(mesh.shape[a] for a in axes)
 
 
+def check_sample_budget(settings, shards: int) -> None:
+    """The static sample budget must divide across the pixel shards.
+
+    Each shard traces the tile fn at ``tile_pixels / shards`` rays and
+    gets ``sample_budget / shards`` of the evaluation budget
+    (``RenderSettings.tile_budget``); a non-divisible budget would
+    silently round per shard and the global budget would drift."""
+    if not getattr(settings, "occupancy", False):
+        return
+    budget = settings.sample_budget
+    if budget is not None and budget % shards != 0:
+        raise ValueError(
+            f"sample_budget={budget} not divisible by the mesh's "
+            f"{shards} pixel shards")
+
+
 def shard_tile_fn(tile_fn: Callable, mesh: Mesh,
-                  rules: Optional[LogicalRules] = None) -> Callable:
+                  rules: Optional[LogicalRules] = None,
+                  with_aux: bool = False) -> Callable:
     """Wrap a multi-scene tile fn with a pixel-parallel ``shard_map``.
 
     ``tile_fn(stacked_params, scene_id, cam, pixel_ids, mask) -> rgb``:
     pixel_ids/mask/rgb shard over the 'field_batch' mesh axes; stacked
     params, scene id, and camera are replicated (the grid_sram residency
     model — every chip holds every scene's tables).
+
+    With ``with_aux`` the tile fn also returns a ``(1, 3)`` live-sample
+    row; each shard's row shards along its leading axis (the host sums
+    the ``(shards, 3)`` result). Note the evaluation budget is
+    partitioned per shard, so budget overflow sheds samples per shard
+    rather than globally — exact whenever no shard overflows.
     """
     axes = _pixel_axes(mesh, rules)
     if axes is None:
@@ -53,4 +76,5 @@ def shard_tile_fn(tile_fn: Callable, mesh: Mesh,
     rep = P()
     return shard_map(tile_fn, mesh=mesh,
                      in_specs=(rep, rep, rep, pix, pix),
-                     out_specs=pix, check_rep=False)
+                     out_specs=(pix, pix) if with_aux else pix,
+                     check_rep=False)

@@ -236,7 +236,8 @@ class TrainEngine:
                  monitor: Optional[HeartbeatMonitor] = None,
                  detector: Optional[StragglerDetector] = None,
                  policy: Optional[FailurePolicy] = None,
-                 on_event: Optional[Callable] = None):
+                 on_event: Optional[Callable] = None,
+                 on_chunk_end: Optional[Callable] = None):
         if (device_batch_fn is None) == (host_batch_fn is None):
             raise ValueError(
                 "exactly one of device_batch_fn / host_batch_fn required")
@@ -254,6 +255,11 @@ class TrainEngine:
         self.on_event = on_event if on_event is not None else (
             lambda ev: print(f"[train] failure event: {ev} — "
                              f"see runtime/elastic.py"))
+        # Fires once per completed chunk with (end_step, state) — the
+        # natural cadence for auxiliary structures refreshed from the
+        # live params (e.g. core.occupancy EMA updates, DESIGN.md §7)
+        # without putting them in the scanned/donated training state.
+        self.on_chunk_end = on_chunk_end
         self.host = cfg.host or f"host{jax.process_index()}"
         self.events: List = []
         self._chunk_cache: Dict[int, Callable] = {}
@@ -371,6 +377,8 @@ class TrainEngine:
                         or end - last_saved >= cfg.ckpt_every):
                     ckpt.save(state, end)   # host snapshot before donation
                     last_saved = end
+                if self.on_chunk_end is not None:
+                    self.on_chunk_end(end, state)
                 ev = self.policy.poll(end)
                 if ev is not None:
                     self.events.append(ev)

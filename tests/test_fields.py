@@ -74,13 +74,17 @@ def test_render_frame_all_apps():
 
 
 def test_composite_matches_manual():
+    # exp(cumsum) transmittance (exact: 1-alpha == exp(-sigma*dt)) — the
+    # one formulation both the XLA path and the Pallas ray-march kernel
+    # share since the occupancy PR (DESIGN.md §7).
     rgb = jnp.ones((2, 3, 3)) * jnp.array([1.0, 0.0, 0.0])
     sigma = jnp.array([[1.0, 2.0, 0.5], [0.0, 0.0, 0.0]])
     dts = jnp.ones((2, 3)) * 0.5
     pix, opac = render.composite(rgb, sigma, dts)
     alpha = 1 - np.exp(-np.asarray(sigma) * 0.5)
-    T = np.cumprod(np.concatenate([np.ones((2, 1)), 1 - alpha[:, :-1] +
-                                   1e-10], 1), 1)
+    T = np.exp(-np.cumsum(
+        np.concatenate([np.zeros((2, 1)), np.asarray(sigma)[:, :-1] * 0.5],
+                       1), 1))
     w = T * alpha
     np.testing.assert_allclose(np.asarray(opac), w.sum(1), atol=1e-5)
     np.testing.assert_allclose(np.asarray(pix[:, 0]), w.sum(1), atol=1e-5)
