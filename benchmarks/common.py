@@ -2,25 +2,12 @@
 target — structural metrics come from the dry-run artifacts)."""
 from __future__ import annotations
 
-import dataclasses
 import json
-import time
-from typing import Callable, Dict, List
+from typing import Dict, List
 
-import jax
-import jax.numpy as jnp
-
-
-def time_fn(fn, *args, warmup: int = 2, iters: int = 5) -> float:
-    """Median wall time (s) of a jitted callable."""
-    for _ in range(warmup):
-        jax.block_until_ready(fn(*args))
-    ts = []
-    for _ in range(iters):
-        t0 = time.perf_counter()
-        jax.block_until_ready(fn(*args))
-        ts.append(time.perf_counter() - t0)
-    return sorted(ts)[len(ts) // 2]
+# ONE timing implementation repo-wide (DESIGN.md §8): warmup-exclusion
+# semantics live in obs.trace.time_fn; this is a compat re-export.
+from repro.obs.trace import time_fn  # noqa: F401
 
 
 class Csv:

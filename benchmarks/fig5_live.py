@@ -1,0 +1,130 @@
+"""Paper Fig. 5, measured live: phase breakdown of an instrumented
+end-to-end serve of pixel-request tiles, attributed with the obs span
+tracer in **synced** mode (DESIGN.md §8).
+
+``fig5_breakdown`` times the three phase callables in isolation with
+``time_fn``; this module instead runs the serve tile path — orbiting
+camera, request stream, one compiled fn per phase — under
+``TRACER.enable(sync=True)`` and reduces the spans with
+``Tracer.phase_totals()``. Phase names are the repo taxonomy
+(raymarch | encode | mlp | composite), so the same names show up in the
+exported Chrome trace, the engine phase histograms, and XLA profiles.
+
+The paper's RTX3090 claim: input encoding + MLP = 72.4% (hashgrid) /
+60.0% (densegrid) / 59.9% (tiled) of application time. The
+``fig5_live`` BENCH row reports the live share next to those refs.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from benchmarks.common import Csv, small_field
+from repro.common.param import unbox
+from repro.core import encoding as enc, fields, render
+from repro.core.mlp import apply_mlp
+from repro.data import scenes
+from repro.obs.trace import TRACER
+
+PAPER_REF = {"hash": 72.4, "dense": 60.0, "tiled": 59.9}
+
+N_SAMPLES = 32
+
+
+def _phase_fns(cfg):
+    """The serve tile path split at the phase boundaries, one jitted fn
+    per phase so synced spans attribute device-complete time."""
+
+    @jax.jit
+    def raymarch(cam, pixel_ids):
+        o, d = render.make_rays(cam, pixel_ids)
+        pts, dts = render.sample_along_rays(o, d, 0.5, 4.5, N_SAMPLES)
+        flat = render.normalize_to_unit(pts.reshape(-1, 3))
+        return flat, dts
+
+    @jax.jit
+    def encode(tables, flat_pts):
+        return enc.grid_encode(flat_pts, tables, cfg.grid)
+
+    @jax.jit
+    def mlp(mp, feats):
+        out = apply_mlp(mp, feats, cfg.mlp)
+        rgb = jax.nn.sigmoid(out[:, :3])
+        sigma = jnp.exp(out[:, 3:])
+        return rgb, sigma
+
+    @jax.jit
+    def composite(rgb, sigma, dts):
+        # deterministic sampling broadcasts dts to (1, S); ray count
+        # comes from the flat field output
+        n_rays = rgb.shape[0] // N_SAMPLES
+        return render.composite(rgb.reshape(n_rays, N_SAMPLES, 3),
+                                sigma.reshape(n_rays, N_SAMPLES), dts)
+
+    return raymarch, encode, mlp, composite
+
+
+def _serve_tile(fns, params, cam, pixel_ids):
+    """One instrumented request: every phase a synced span."""
+    raymarch, encode, mlp, composite = fns
+    with TRACER.span("raymarch", cat="phase") as sp:
+        flat, dts = raymarch(cam, pixel_ids)
+        sp.bind(flat)
+    with TRACER.span("encode", cat="phase") as sp:
+        feats = sp.bind(encode(params["grid"], flat))
+    with TRACER.span("mlp", cat="phase") as sp:
+        rgb, sigma = mlp(params["mlp"], feats)
+        sp.bind(rgb)
+    with TRACER.span("composite", cat="phase") as sp:
+        pixel, _ = composite(rgb, sigma, dts)
+        sp.bind(pixel)
+    return pixel
+
+
+def run(csv: Csv, n_rays: int = 2048, n_requests: int = 6,
+        encodings=("hash", "dense", "tiled")):
+    was_enabled, was_sync = TRACER.enabled, TRACER.sync
+    payload = {"n_rays": n_rays, "n_samples": N_SAMPLES,
+               "n_requests": n_requests, "encodings": {}}
+    try:
+        for kind in encodings:
+            cfg = small_field("nvr", kind)
+            params, _ = unbox(fields.init_field(jax.random.PRNGKey(0), cfg))
+            fns = _phase_fns(cfg)
+            cams = [scenes.orbit_camera(128, 128, 2 * jnp.pi * c / 4)
+                    for c in range(4)]
+            rng = jax.random.PRNGKey(1)
+            reqs = []
+            for r in range(n_requests + 1):
+                rng, k = jax.random.split(rng)
+                reqs.append((cams[r % len(cams)],
+                             jax.random.randint(k, (n_rays,), 0, 128 * 128,
+                                                jnp.int32)))
+            # warmup request compiles all four phases; spans recorded
+            # after clear() cover steady-state only (time_fn semantics)
+            TRACER.enable(sync=True)
+            jax.block_until_ready(_serve_tile(fns, params, *reqs[0]))
+            TRACER.clear()
+            for cam, ids in reqs[1:]:
+                jax.block_until_ready(_serve_tile(fns, params, cam, ids))
+
+            totals = TRACER.phase_totals(cat="phase")
+            TRACER.clear()
+            total = sum(totals.values())
+            share = (totals["encode"] + totals["mlp"]) / total * 100
+            for phase in ("raymarch", "encode", "mlp", "composite"):
+                csv.add(f"fig5_live/{kind}/{phase}",
+                        totals[phase] / n_requests,
+                        f"{totals[phase] / total * 100:.1f}%_of_serve")
+            csv.add(f"fig5_live/{kind}/enc+mlp_share", total / n_requests,
+                    f"{share:.1f}%_paper_{PAPER_REF[kind]}%")
+            payload["encodings"][kind] = {
+                "phase_s": {k: round(v / n_requests, 6)
+                            for k, v in sorted(totals.items())},
+                "enc_mlp_share_pct": round(share, 1),
+                "paper_ref_pct": PAPER_REF[kind],
+            }
+    finally:
+        TRACER.enabled, TRACER.sync = was_enabled, was_sync
+        TRACER.clear()
+    csv.add_json("fig5_live", payload)

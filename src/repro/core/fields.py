@@ -22,6 +22,7 @@ from repro.common.param import KeyGen, unbox
 from repro.core import encoding as enc
 from repro.core.encoding import GridConfig
 from repro.core.mlp import MLPConfig, apply_mlp, init_mlp
+from repro.obs.trace import annotate
 
 
 @dataclasses.dataclass(frozen=True)
@@ -124,18 +125,27 @@ def apply_field(params: Dict, cfg: FieldConfig, points: jnp.ndarray,
         from repro.kernels.fused_field import ops as ff_ops
         return ff_ops.apply_field_fused(params, cfg, points, dirs)
 
+    # phase scopes (DESIGN.md §8): XLA profiles / HLO metadata carry the
+    # same encode|mlp names the host spans and fig5_live use
     barrier = not fused
     if cfg.app == "nerf":
-        h = _encode(points, params["grid"], cfg.grid, barrier)
-        dfeat = apply_mlp(params["density_mlp"], h, cfg.density_mlp)
-        sigma = jnp.exp(dfeat[:, :1])          # instant-NGP exp activation
-        sh = enc.sh_encode(dirs)
-        color_in = jnp.concatenate([sh, dfeat], axis=-1)
-        rgb = jax.nn.sigmoid(apply_mlp(params["mlp"], color_in, cfg.mlp))
+        with annotate("encode"):
+            h = _encode(points, params["grid"], cfg.grid, barrier)
+        with annotate("mlp"):
+            dfeat = apply_mlp(params["density_mlp"], h, cfg.density_mlp)
+            sigma = jnp.exp(dfeat[:, :1])      # instant-NGP exp activation
+        with annotate("encode"):
+            sh = enc.sh_encode(dirs)
+        with annotate("mlp"):
+            color_in = jnp.concatenate([sh, dfeat], axis=-1)
+            rgb = jax.nn.sigmoid(apply_mlp(params["mlp"], color_in,
+                                           cfg.mlp))
         return jnp.concatenate([rgb, sigma], axis=-1)
 
-    h = _encode(points, params["grid"], cfg.grid, barrier)
-    out = apply_mlp(params["mlp"], h, cfg.mlp)
+    with annotate("encode"):
+        h = _encode(points, params["grid"], cfg.grid, barrier)
+    with annotate("mlp"):
+        out = apply_mlp(params["mlp"], h, cfg.mlp)
     if cfg.app == "gia":
         return jax.nn.sigmoid(out)
     if cfg.app == "nvr":

@@ -20,6 +20,7 @@ import jax.numpy as jnp
 from repro.core import fields, render
 from repro.core.fields import FieldConfig
 from repro.data import scenes
+from repro.obs.trace import annotate
 
 
 @dataclasses.dataclass(frozen=True)
@@ -130,7 +131,8 @@ def make_tile_fn(cfg: FieldConfig, settings: RenderSettings,
             px = (pixel_ids % w_i).astype(jnp.float32) / cam.width
             return with_dense_aux(
                 feval(params, jnp.stack([px, py], axis=-1)), n_pix)
-        origins, dirs = render.make_rays(cam, pixel_ids)
+        with annotate("raymarch"):
+            origins, dirs = render.make_rays(cam, pixel_ids)
         if cfg.app == "nsdf":
             return with_dense_aux(
                 shade_nsdf(params, cfg, origins, dirs, settings), n_pix)

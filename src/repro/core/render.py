@@ -25,6 +25,8 @@ from typing import Callable, Dict, Optional, Tuple
 import jax
 import jax.numpy as jnp
 
+from repro.obs.trace import annotate
+
 
 @jax.tree_util.register_pytree_node_class
 class Camera:
@@ -217,9 +219,13 @@ def render_rays(field_apply: Callable, origins: jnp.ndarray,
     evaluation count).
     """
     n_rays = origins.shape[0]
-    pts, dts = sample_along_rays(origins, dirs, near, far, n_samples, rng)
-    flat_pts = normalize_to_unit(pts.reshape(-1, 3))
-    flat_dirs = jnp.repeat(dirs, n_samples, axis=0)
+    # phase scopes (DESIGN.md §8): raymarch = sampling bookkeeping,
+    # compact = cull mask + static-budget sort, composite = integration
+    with annotate("raymarch"):
+        pts, dts = sample_along_rays(origins, dirs, near, far, n_samples,
+                                     rng)
+        flat_pts = normalize_to_unit(pts.reshape(-1, 3))
+        flat_dirs = jnp.repeat(dirs, n_samples, axis=0)
     n_total = n_rays * n_samples
 
     if occupancy is None:
@@ -231,32 +237,36 @@ def render_rays(field_apply: Callable, origins: jnp.ndarray,
     else:
         budget = (n_total if sample_budget is None
                   else max(1, min(int(sample_budget), n_total)))
-        live = _cull_mask(occupancy, flat_pts.reshape(
-            n_rays, n_samples, 3), dts, early_term_eps)    # (R, S)
-        # Drop-order key: live samples first, ordered near-to-far (the
-        # march index s), dead last — so budget overflow sheds the
-        # farthest live samples first. Stable sort keeps ray order
-        # within a depth slice deterministic.
-        s_idx = jnp.broadcast_to(
-            jnp.arange(n_samples, dtype=jnp.int32)[None, :],
-            (n_rays, n_samples))
-        key = jnp.where(live, s_idx, s_idx + n_samples).reshape(-1)
-        order = jnp.argsort(key, stable=True)              # (R*S,)
-        sel = order[:budget]                               # static shape
+        with annotate("compact"):
+            live = _cull_mask(occupancy, flat_pts.reshape(
+                n_rays, n_samples, 3), dts, early_term_eps)    # (R, S)
+            # Drop-order key: live samples first, ordered near-to-far (the
+            # march index s), dead last — so budget overflow sheds the
+            # farthest live samples first. Stable sort keeps ray order
+            # within a depth slice deterministic.
+            s_idx = jnp.broadcast_to(
+                jnp.arange(n_samples, dtype=jnp.int32)[None, :],
+                (n_rays, n_samples))
+            key = jnp.where(live, s_idx, s_idx + n_samples).reshape(-1)
+            order = jnp.argsort(key, stable=True)              # (R*S,)
+            sel = order[:budget]                               # static shape
         out_sel = field_apply(flat_pts[sel], flat_dirs[sel])  # (budget, 4)
-        out = jnp.zeros((n_total, 4), out_sel.dtype).at[sel].set(out_sel)
-        out = out.reshape(n_rays, n_samples, 4)
-        rgb = out[..., :3]
-        # dead-in-budget samples carry garbage -> force transparent;
-        # live-beyond-budget samples were never written -> already 0.
-        sigma = jnp.where(live, out[..., 3], 0.0)
-        n_live = jnp.sum(live, dtype=jnp.int32)
-        aux = {"n_live": n_live, "n_budget": budget,
-               "n_dropped": jnp.maximum(n_live - budget, 0)}
+        with annotate("compact"):
+            out = jnp.zeros((n_total, 4),
+                            out_sel.dtype).at[sel].set(out_sel)
+            out = out.reshape(n_rays, n_samples, 4)
+            rgb = out[..., :3]
+            # dead-in-budget samples carry garbage -> force transparent;
+            # live-beyond-budget samples were never written -> already 0.
+            sigma = jnp.where(live, out[..., 3], 0.0)
+            n_live = jnp.sum(live, dtype=jnp.int32)
+            aux = {"n_live": n_live, "n_budget": budget,
+                   "n_dropped": jnp.maximum(n_live - budget, 0)}
 
-    if use_pallas_composite:
-        from repro.kernels.ray_march import ops as rm_ops
-        pixel, _ = rm_ops.composite(rgb, sigma, dts)
-    else:
-        pixel, _ = composite(rgb, sigma, dts)
+    with annotate("composite"):
+        if use_pallas_composite:
+            from repro.kernels.ray_march import ops as rm_ops
+            pixel, _ = rm_ops.composite(rgb, sigma, dts)
+        else:
+            pixel, _ = composite(rgb, sigma, dts)
     return (pixel, aux) if return_aux else pixel

@@ -22,6 +22,7 @@ from repro.core.fields import FieldConfig
 from repro.kernels.common import default_interpret, pad_batch, pick_level_group
 from repro.kernels.fused_field.fused_field import fused_field_pallas
 from repro.kernels.fused_mlp import ops as mlp_ops
+from repro.obs.trace import annotate
 
 
 def _field_ref(points, tables, w_in, w_hidden, w_out, grid_cfg, mlp_cfg):
@@ -77,9 +78,12 @@ def field(points, tables, mlp_params, grid_cfg, mlp_cfg, *,
     w_hidden = mlp_params.get(
         "w_hidden", jnp.zeros((1, mlp_cfg.hidden_dim, mlp_cfg.hidden_dim),
                               mlp_params["w_in"].dtype))
-    return _field(points, tables, mlp_params["w_in"], w_hidden,
-                  mlp_params["w_out"], grid_cfg, mlp_cfg, block_b,
-                  level_group, interpret)
+    # one fused pallas_call covers both phases — annotate as the combined
+    # encode_mlp phase (DESIGN.md §8: the NFP route can't split them)
+    with annotate("encode_mlp"):
+        return _field(points, tables, mlp_params["w_in"], w_hidden,
+                      mlp_params["w_out"], grid_cfg, mlp_cfg, block_b,
+                      level_group, interpret)
 
 
 def apply_field_fused(params, cfg: FieldConfig, points, dirs=None,

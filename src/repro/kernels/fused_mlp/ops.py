@@ -14,6 +14,7 @@ import jax.numpy as jnp
 from repro.core.mlp import MLPConfig
 from repro.kernels.common import default_interpret, pad_batch
 from repro.kernels.fused_mlp.fused_mlp import fused_mlp_pallas
+from repro.obs.trace import annotate
 
 
 def _mlp_ref(x, w_in, w_hidden, w_out, cfg: MLPConfig):
@@ -59,5 +60,6 @@ def mlp(params, x: jnp.ndarray, cfg: MLPConfig, *, block_b: int = 512,
     w_hidden = params.get("w_hidden",
                           jnp.zeros((1, cfg.hidden_dim, cfg.hidden_dim),
                                     params["w_in"].dtype))
-    return _mlp(x, params["w_in"], w_hidden, params["w_out"], cfg, block_b,
-                interpret)
+    with annotate("mlp"):
+        return _mlp(x, params["w_in"], w_hidden, params["w_out"], cfg,
+                    block_b, interpret)

@@ -16,6 +16,7 @@ from repro.core.encoding import GridConfig
 from repro.kernels.common import default_interpret, pad_batch, pick_level_group
 from repro.kernels.hashgrid import vjp
 from repro.kernels.hashgrid.hashgrid import hashgrid_encode_pallas
+from repro.obs.trace import annotate
 
 
 @functools.partial(jax.custom_vjp, nondiff_argnums=(2, 3, 4, 5))
@@ -53,4 +54,5 @@ def encode(points: jnp.ndarray, tables: jnp.ndarray, cfg: GridConfig,
     if level_group is None:
         level_group = pick_level_group(cfg, tables.dtype, vmem_budget_bytes)
     block_b = min(block_b, max(8, points.shape[0]))
-    return _encode(points, tables, cfg, block_b, level_group, interpret)
+    with annotate("encode"):
+        return _encode(points, tables, cfg, block_b, level_group, interpret)

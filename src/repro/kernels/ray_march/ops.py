@@ -8,6 +8,7 @@ import jax.numpy as jnp
 
 from repro.kernels.common import default_interpret
 from repro.kernels.ray_march.ray_march import composite_pallas
+from repro.obs.trace import annotate
 
 
 @functools.partial(jax.jit, static_argnames=("block_r", "interpret"))
@@ -25,6 +26,7 @@ def composite(rgb, sigma, dts, *, block_r: int = 256,
         rgb = jnp.pad(rgb, ((0, pad), (0, 0), (0, 0)))
         sigma = jnp.pad(sigma, ((0, pad), (0, 0)))
         dts = jnp.pad(dts, ((0, pad), (0, 0)))
-    pix, opac = composite_pallas(rgb, sigma, dts, block_r=block_r,
-                                 interpret=interpret)
+    with annotate("composite"):
+        pix, opac = composite_pallas(rgb, sigma, dts, block_r=block_r,
+                                     interpret=interpret)
     return pix[:r], opac[:r]

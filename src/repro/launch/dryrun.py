@@ -35,8 +35,11 @@ from repro.configs import registry
 from repro.configs.shapes import SHAPES, shape_applicable
 from repro.launch import roofline
 from repro.launch.mesh import make_production_mesh, mesh_chip_count
+from repro.obs import log as obs_log
 from repro.parallel import api
 from repro.common.partitioning import LogicalRules, rule_preset
+
+_LOG = obs_log.get_logger("dryrun")
 
 DEFAULT_OUT = Path(__file__).resolve().parents[3] / "benchmarks" / \
     "results" / "dryrun.json"
@@ -202,16 +205,17 @@ def lower_cell(arch: str, shape: str, multi_pod: bool,
     })
     if verbose:
         ma = rec.get("memory_analysis", {})
-        print(f"[dryrun] {name}: compile={t_compile:.0f}s "
-              f"probes={t_probe:.0f}s dominant={rec['dominant']} "
-              f"bound={rec['bound_s'] * 1e3:.2f}ms "
-              f"flops/dev={rec['flops_per_device']:.3g} "
-              f"coll/dev={rec['collective_bytes_per_device']:.3g}B")
-        print(f"[dryrun] memory_analysis: args={ma.get('argument_bytes')} "
-              f"temp={ma.get('temp_bytes')} "
-              f"fits_16G={ma.get('fits_v5e_16g')}")
-        print(f"[dryrun] cost_analysis(extrapolated): "
-              f"flops={full['flops']:.4g} bytes={full['bytes']:.4g}")
+        _LOG.info("cell", name=name, compile_s=round(t_compile),
+                  probe_s=round(t_probe), dominant=rec["dominant"],
+                  bound_ms=round(rec["bound_s"] * 1e3, 2),
+                  flops_per_device=rec["flops_per_device"],
+                  coll_bytes_per_device=rec["collective_bytes_per_device"])
+        _LOG.info("memory_analysis", name=name,
+                  argument_bytes=ma.get("argument_bytes"),
+                  temp_bytes=ma.get("temp_bytes"),
+                  fits_v5e_16g=ma.get("fits_v5e_16g"))
+        _LOG.info("cost_analysis_extrapolated", name=name,
+                  flops=full["flops"], bytes=full["bytes"])
     return rec
 
 
@@ -266,10 +270,10 @@ def field_cell(app: str, encoding: str, multi_pod: bool,
                 "n_pixels": n_pix})
     if verbose:
         ma = rec.get("memory_analysis", {})
-        print(f"[dryrun] {name}: compile={t:.0f}s "
-              f"dominant={rec['dominant']} "
-              f"bound={rec['bound_s'] * 1e3:.2f}ms "
-              f"temp={ma.get('temp_bytes')}")
+        _LOG.info("field_cell", name=name, compile_s=round(t),
+                  dominant=rec["dominant"],
+                  bound_ms=round(rec["bound_s"] * 1e3, 2),
+                  temp_bytes=ma.get("temp_bytes"))
     return rec
 
 
@@ -315,7 +319,7 @@ def main(argv=None):
                 key += f"@{args.rules}"
             if key in results and not args.force \
                     and "error" not in results[key]:
-                print(f"[dryrun] {key}: cached, skip", flush=True)
+                _LOG.info("cached_skip", cell=key)
                 continue
             try:
                 rec = (lower_cell(a, b, multi, args.rules,
@@ -328,8 +332,8 @@ def main(argv=None):
                 failures += 1
             results[key] = rec
             _save(out, results)
-    print(f"[dryrun] done: {len(cells) * len(meshes)} cells, "
-          f"{failures} failures -> {out}")
+    _LOG.info("done", n_cells=len(cells) * len(meshes),
+              failures=failures, out=str(out))
     return 1 if failures else 0
 
 

@@ -19,6 +19,10 @@ import numpy as np
 
 from repro.configs import registry
 from repro.launch.mesh import make_local_mesh
+from repro.obs import log as obs_log
+from repro.obs.trace import TRACER
+
+_LOG = obs_log.get_logger("serve")
 
 
 def serve_render(app: str = "gia", encoding: str = "hash",
@@ -27,7 +31,8 @@ def serve_render(app: str = "gia", encoding: str = "hash",
                  width: int = 128, use_pallas: bool = False, seed: int = 0,
                  n_scenes: int = 2, n_cameras: int = 3, shard: bool = False,
                  occupancy: bool = False,
-                 sample_budget: int | None = None):
+                 sample_budget: int | None = None,
+                 metrics_out: str | None = None):
     """Train ``n_scenes`` small fields, then serve a mixed request stream
     (scenes x viewpoints) through the RenderEngine — one compiled
     executable for the whole bucket, warmup excluded from latency stats.
@@ -60,13 +65,14 @@ def serve_render(app: str = "gia", encoding: str = "hash",
     mesh = make_local_mesh() if shard else None
     engine = RenderEngine(settings, mesh=mesh)
     for s in range(n_scenes):
-        print(f"[serve] training scene {s} ({cfg.name}) "
-              f"for {train_steps} steps...")
+        _LOG.info("train_scene", scene=s, config=cfg.name,
+                  steps=train_steps)
         params, hist = train_field(
             cfg, steps=train_steps, batch_size=4096, seed=seed + s,
             occupancy_res=32 if occupancy else None)
-        print(f"[serve] scene {s} trained: "
-              f"loss {hist[0][1]:.4f} -> {hist[-1][1]:.4f}")
+        _LOG.info("scene_trained", scene=s,
+                  loss_first=round(float(hist[0][1]), 4),
+                  loss_last=round(float(hist[-1][1]), 4))
         engine.add_scene(f"scene{s}", cfg, params)
 
     # viewpoints orbiting the scene — all served by the same executable
@@ -74,7 +80,8 @@ def serve_render(app: str = "gia", encoding: str = "hash",
             for c in range(n_cameras)]
 
     t_warm = engine.warmup()
-    print(f"[serve] warmup (compile, excluded from stats): {t_warm:.2f}s")
+    _LOG.info("warmup", compile_s=round(t_warm, 2),
+              note="excluded from stats")
 
     # mixed batched request stream: random (scene, camera, pixels) tuples
     rng = np.random.default_rng(seed)
@@ -86,22 +93,29 @@ def serve_render(app: str = "gia", encoding: str = "hash",
     engine.flush()
 
     stats = engine.stats()
-    print(f"[serve] {stats['n_requests']} requests, "
-          f"{n_scenes} scenes x {n_cameras} cameras: "
-          f"p50 {stats['p50_ms']:.1f}ms p99 {stats['p99_ms']:.1f}ms "
-          f"{stats['mpix_per_s']:.2f} Mpix/s "
-          f"(compiles: {stats['n_traces_total']})")
+    _LOG.info("served", n_requests=stats["n_requests"],
+              n_scenes=n_scenes, n_cameras=n_cameras,
+              p50_ms=round(stats["p50_ms"], 1),
+              p99_ms=round(stats["p99_ms"], 1),
+              mpix_per_s=round(stats["mpix_per_s"], 2),
+              compiles=stats["n_traces_total"])
     if occupancy:
-        print(f"[serve] occupancy culling: "
-              f"live fraction {stats['live_sample_frac']:.3f}, "
-              f"{stats['samples_dropped']:.0f} samples dropped, "
-              f"effective {stats['effective_mpix_per_s']:.2f} Mpix/s")
+        _LOG.info("occupancy_culling",
+                  live_sample_frac=round(stats["live_sample_frac"], 3),
+                  samples_dropped=stats["samples_dropped"],
+                  effective_mpix_per_s=round(
+                      stats["effective_mpix_per_s"], 2))
     med_s = stats["p50_ms"] / 1e3
-    print(f"[serve] 4k frame budget needs "
-          f"{3840 * 2160 / tile_pixels * med_s * 1e3:.0f}ms/frame")
+    _LOG.info("frame_budget_4k",
+              ms_per_frame=round(3840 * 2160 / tile_pixels * med_s * 1e3))
     if stats["n_traces_total"] != len(stats["buckets"]):
-        print("[serve] WARNING: more traces than buckets — "
-              "camera/scene leaked into the compiled graph")
+        _LOG.warning("bucket_leak", traces=stats["n_traces_total"],
+                     buckets=len(stats["buckets"]),
+                     hint="camera/scene leaked into the compiled graph")
+    if metrics_out:
+        with open(metrics_out, "w") as f:
+            f.write(engine.obs.to_json())
+        _LOG.info("metrics_written", path=metrics_out)
     return stats
 
 
@@ -155,10 +169,18 @@ def serve_lm(arch: str, reduced: bool = True, batch: int = 2,
         tok = jnp.argmax(logits, -1).astype(jnp.int32)[:, None]
     jax.block_until_ready(logits)
     t_decode = time.perf_counter() - t0
-    print(f"[serve] {arch}: prefill({prompt_len} tok) {t_prefill*1e3:.0f}ms"
-          f"; {gen_len} decode steps {t_decode*1e3:.0f}ms "
-          f"({gen_len * batch / t_decode:.1f} tok/s)")
-    print(f"[serve] sample: {np.stack(out_tokens, 1)[0][:12]}")
+    if TRACER.enabled:
+        now = time.perf_counter()
+        TRACER.add_event("lm.prefill", now - t_decode - t_prefill,
+                         now - t_decode, cat="serve", arch=arch)
+        TRACER.add_event("lm.decode", now - t_decode, now, cat="serve",
+                         arch=arch, n_steps=gen_len)
+    _LOG.info("lm_served", arch=arch, prompt_len=prompt_len,
+              prefill_ms=round(t_prefill * 1e3),
+              decode_steps=gen_len, decode_ms=round(t_decode * 1e3),
+              tok_per_s=round(gen_len * batch / t_decode, 1))
+    _LOG.info("lm_sample",
+              tokens=[int(t) for t in np.stack(out_tokens, 1)[0][:12]])
     return t_prefill, t_decode
 
 
@@ -184,7 +206,17 @@ def main(argv=None):
     ap.add_argument("--sample-budget", type=int, default=None,
                     help="static field-eval budget per tile (default: "
                          "tile_pixels * n_samples, the dense count)")
+    ap.add_argument("--trace-out", default=None,
+                    help="write a Chrome-trace JSON of the run here "
+                         "(enables the span tracer)")
+    ap.add_argument("--trace-sync", action="store_true",
+                    help="device-sync at span close for device-complete "
+                         "phase times (slower; implies --trace-out use)")
+    ap.add_argument("--metrics-out", default=None,
+                    help="write the engine metrics snapshot JSON here")
     args = ap.parse_args(argv)
+    if args.trace_out or args.trace_sync:
+        TRACER.enable(sync=args.trace_sync)
     if args.mode == "render":
         serve_render(args.app, args.encoding, use_pallas=args.use_pallas,
                      train_steps=args.train_steps, n_requests=args.requests,
@@ -192,9 +224,14 @@ def main(argv=None):
                      width=args.width, n_scenes=args.scenes,
                      n_cameras=args.cameras, shard=args.shard,
                      occupancy=args.occupancy,
-                     sample_budget=args.sample_budget)
+                     sample_budget=args.sample_budget,
+                     metrics_out=args.metrics_out)
     else:
         serve_lm(args.arch, args.reduced)
+    if args.trace_out:
+        TRACER.export(args.trace_out)
+        _LOG.info("trace_written", path=args.trace_out,
+                  n_events=len(TRACER.events()))
 
 
 if __name__ == "__main__":

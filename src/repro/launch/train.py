@@ -22,16 +22,19 @@ from repro.common.partitioning import DEFAULT_RULES
 from repro.configs import registry
 from repro.data import tokens as token_data
 from repro.launch.mesh import make_local_mesh
+from repro.obs import log as obs_log
+from repro.obs.trace import TRACER
 from repro.parallel import api
-from repro.runtime.health import (FailurePolicy, HeartbeatMonitor,
-                                  StragglerDetector)
 from repro.train import loop
+
+_LOG = obs_log.get_logger("train")
 
 
 def train_loop(cfg, mesh, *, steps: int, seq_len: int, global_batch: int,
                ckpt_dir=None, ckpt_every: int = 50, rules=None,
                train_cfg: api.TrainConfig = None, log_every: int = 10,
-               seed: int = 0, on_step=None, chunk_steps: int = 16):
+               seed: int = 0, on_step=None, chunk_steps: int = 16,
+               metrics_out: str | None = None):
     rules = rules or DEFAULT_RULES.copy_with()
     train_cfg = train_cfg or api.TrainConfig()
     example = {"batch": {"tokens": jax.ShapeDtypeStruct(
@@ -52,16 +55,15 @@ def train_loop(cfg, mesh, *, steps: int, seq_len: int, global_batch: int,
         vocab_size=cfg.vocab_size, seq_len=seq_len,
         global_batch=global_batch, seed=seed))
 
-    monitor = HeartbeatMonitor(timeout_s=600.0)
-    detector = StragglerDetector()
+    # health stack comes from the engine defaults: its own registry owns
+    # the per-host step histograms (health.step_s.<host>) and the
+    # silent-host gauge — DESIGN.md §8
     engine = loop.TrainEngine(
         loop.EngineConfig(steps=steps, chunk_steps=chunk_steps,
                           ckpt_dir=ckpt_dir, ckpt_every=ckpt_every),
         lambda state, step, batch: raw_step(state, batch),
         host_batch_fn=src.batch,
-        state_shardings=sh["state"], batch_shardings=sh["batch"],
-        monitor=monitor, detector=detector,
-        policy=FailurePolicy(monitor, detector))
+        state_shardings=sh["state"], batch_shardings=sh["batch"])
 
     losses = []
 
@@ -70,10 +72,14 @@ def train_loop(cfg, mesh, *, steps: int, seq_len: int, global_batch: int,
         if on_step:
             on_step(step, row["loss"], st)
         if step % log_every == 0:
-            print(f"[train] step={step} loss={row['loss']:.4f} "
-                  f"dt={row['dt'] * 1e3:.0f}ms")
+            _LOG.info("step", step=step, loss=round(float(row["loss"]), 4),
+                      dt_ms=round(row["dt"] * 1e3))
 
     state, _ = engine.run(state, on_metrics=on_metrics)
+    if metrics_out:
+        with open(metrics_out, "w") as f:
+            f.write(engine.obs.to_json())
+        _LOG.info("metrics_written", path=metrics_out)
     return state, losses
 
 
@@ -92,8 +98,14 @@ def main(argv=None):
     ap.add_argument("--microbatches", type=int, default=1)
     ap.add_argument("--compression", default=None,
                     choices=[None, "topk", "int8"])
+    ap.add_argument("--trace-out", default=None,
+                    help="write a Chrome-trace JSON (train.chunk events)")
+    ap.add_argument("--metrics-out", default=None,
+                    help="write the engine metrics snapshot JSON here")
     args = ap.parse_args(argv)
 
+    if args.trace_out:
+        TRACER.enable()
     cfg = (registry.reduced_config(args.arch) if args.reduced
            else registry.get_config(args.arch))
     mesh = make_local_mesh(args.data, args.model)
@@ -103,9 +115,14 @@ def main(argv=None):
                            global_batch=args.batch,
                            ckpt_dir=args.ckpt_dir,
                            ckpt_every=args.ckpt_every,
-                           chunk_steps=args.chunk_steps, train_cfg=tc)
-    print(f"[train] loss {losses[0]:.4f} -> {losses[-1]:.4f} "
-          f"over {len(losses)} steps")
+                           chunk_steps=args.chunk_steps, train_cfg=tc,
+                           metrics_out=args.metrics_out)
+    _LOG.info("trained", loss_first=round(float(losses[0]), 4),
+              loss_last=round(float(losses[-1]), 4), n_steps=len(losses))
+    if args.trace_out:
+        TRACER.export(args.trace_out)
+        _LOG.info("trace_written", path=args.trace_out,
+                  n_events=len(TRACER.events()))
 
 
 if __name__ == "__main__":

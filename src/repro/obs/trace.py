@@ -1,0 +1,197 @@
+"""Host-side span tracer with explicit device-sync boundaries.
+
+Spans are nested host intervals (thread-local stack) exported as
+Chrome-trace "X" events (``obs/export.py``, viewable in
+``chrome://tracing``/Perfetto). Two sync disciplines:
+
+  * **async (default)**: a span measures host time only — submit-side
+    spans on the serve path never call ``block_until_ready``, so tracing
+    cannot perturb XLA's async dispatch. A span's end time is whenever
+    the host leaves the ``with`` block.
+  * **synced** (``TRACER.enable(sync=True)``): a span that ``bind()``-ed
+    a jax value blocks on it at close, so the span covers device
+    completion — the mode ``benchmarks/fig5_live.py`` uses to attribute
+    real serve time to phases.
+
+The process tracer ``TRACER`` is **disabled by default**; a disabled
+``span()`` returns a shared null object (no allocation, no sync — zero
+overhead on hot paths). ``annotate(name)`` is the in-trace counterpart:
+``jax.named_scope`` so XLA profiles / HLO carry the same phase names the
+host spans use (taxonomy: encode|mlp|raymarch|compact|composite|host).
+"""
+from __future__ import annotations
+
+import os
+import threading
+import time
+from typing import Dict, List, Optional
+
+
+def annotate(name: str):
+    """``jax.named_scope`` context manager — phase names inside traced
+    code (kernel entry points, ``core/pipeline.py``), so XLA profiles
+    and HLO op metadata carry the obs phase taxonomy."""
+    import jax
+    return jax.named_scope(name)
+
+
+def time_fn(fn, *args, warmup: int = 2, iters: int = 5) -> float:
+    """Median wall time (s) of a jitted callable — THE definition of
+    warmup-exclusion timing semantics (``warmup`` synced calls excluded,
+    median of ``iters`` synced calls reported). ``benchmarks/common``
+    re-exports this; the serve engine's ``warmup()`` applies the same
+    rule to its latency statistics."""
+    import jax
+    for _ in range(warmup):
+        jax.block_until_ready(fn(*args))
+    ts = []
+    for _ in range(iters):
+        t0 = time.perf_counter()
+        jax.block_until_ready(fn(*args))
+        ts.append(time.perf_counter() - t0)
+    return sorted(ts)[len(ts) // 2]
+
+
+class _NullSpan:
+    """Shared no-op span — what a disabled tracer hands out."""
+    __slots__ = ()
+
+    def __enter__(self):
+        return self
+
+    def __exit__(self, *exc):
+        return False
+
+    def bind(self, value):
+        return value
+
+
+_NULL_SPAN = _NullSpan()
+
+
+class _Span:
+    __slots__ = ("_tracer", "name", "cat", "args", "_t0", "_bound",
+                 "_depth", "_parent")
+
+    def __init__(self, tracer: "Tracer", name: str, cat: str, args: Dict):
+        self._tracer = tracer
+        self.name = name
+        self.cat = cat
+        self.args = args
+        self._bound = None
+
+    def bind(self, value):
+        """Attach a jax value; in synced mode the span blocks on it at
+        close so the span covers device completion. Returns ``value``."""
+        self._bound = value
+        return value
+
+    def __enter__(self):
+        stack = self._tracer._stack()
+        self._depth = len(stack)
+        self._parent = stack[-1] if stack else ""
+        stack.append(self.name)
+        self._t0 = time.perf_counter()
+        return self
+
+    def __exit__(self, *exc):
+        if self._tracer.sync and self._bound is not None:
+            import jax
+            jax.block_until_ready(self._bound)
+        t1 = time.perf_counter()
+        self._tracer._stack().pop()
+        self._tracer.add_event(self.name, self._t0, t1, cat=self.cat,
+                               depth=self._depth, parent=self._parent,
+                               **self.args)
+        return False
+
+
+class Tracer:
+    """Bounded event buffer + span factory (module docstring)."""
+
+    def __init__(self, max_events: int = 200_000):
+        self.enabled = False
+        self.sync = False
+        self.max_events = max_events
+        self.dropped = 0
+        self._events: List[Dict] = []
+        self._epoch = time.perf_counter()
+        self._lock = threading.Lock()
+        self._local = threading.local()
+
+    def _stack(self) -> List[str]:
+        stack = getattr(self._local, "stack", None)
+        if stack is None:
+            stack = self._local.stack = []
+        return stack
+
+    # ------------------------------------------------------------ control
+    def enable(self, sync: bool = False):
+        self.enabled = True
+        self.sync = sync
+
+    def disable(self):
+        self.enabled = False
+        self.sync = False
+
+    def clear(self):
+        with self._lock:
+            self._events = []
+            self.dropped = 0
+            self._epoch = time.perf_counter()
+
+    # ------------------------------------------------------------- record
+    def span(self, name: str, cat: str = "host", **args):
+        """Context manager for one nested span. Disabled tracer -> the
+        shared null span (no allocation, never syncs)."""
+        if not self.enabled:
+            return _NULL_SPAN
+        return _Span(self, name, cat, args)
+
+    def add_event(self, name: str, t0: float, t1: float,
+                  cat: str = "host", **args):
+        """Record a complete event from explicit ``perf_counter`` stamps
+        (the hot-path API: callers time with their own counters and only
+        call this when ``enabled``)."""
+        if not self.enabled:
+            return
+        with self._lock:
+            if len(self._events) >= self.max_events:
+                self.dropped += 1
+                return
+            self._events.append({
+                "name": name, "cat": cat, "ph": "X",
+                "ts": (t0 - self._epoch) * 1e6,
+                "dur": max(0.0, (t1 - t0) * 1e6),
+                "pid": os.getpid(),
+                "tid": threading.get_ident() % (1 << 31),
+                "args": args,
+            })
+
+    # ------------------------------------------------------------- export
+    def events(self) -> List[Dict]:
+        with self._lock:
+            return list(self._events)
+
+    def export(self, path) -> Dict:
+        """Write Chrome-trace JSON; returns the trace object."""
+        from repro.obs import export as export_mod
+        return export_mod.write_chrome_trace(path, self.events(),
+                                             dropped=self.dropped)
+
+    def phase_totals(self, cat: Optional[str] = None) -> Dict[str, float]:
+        """Total seconds per span name (optionally one category) —
+        what ``fig5_live`` reduces its synced spans with."""
+        out: Dict[str, float] = {}
+        for ev in self.events():
+            if cat is not None and ev["cat"] != cat:
+                continue
+            out[ev["name"]] = out.get(ev["name"], 0.0) + ev["dur"] / 1e6
+        return out
+
+
+TRACER = Tracer()
+
+
+def get_tracer() -> Tracer:
+    return TRACER

@@ -3,14 +3,24 @@
 On a real fleet these hooks attach to the cluster scheduler; here they are
 fully implemented and unit-tested against simulated clocks/step-times, and
 ``elastic.remesh_plan`` is exercised by tests that actually rebuild meshes
-at a different host-device count and restore resharded checkpoints."""
+at a different host-device count and restore resharded checkpoints.
+
+Per-host step-time stats live in windowed ``repro.obs.metrics.Histogram``s
+(DESIGN.md §8) — when a ``Registry`` is supplied (the training engine
+passes its own), the detector's histograms ARE the registry's
+``health.step_s.<host>`` entries, so straggler detection and the metrics
+snapshot read the same data instead of a private deque. ``FailurePolicy``
+additionally surfaces *silent* hosts — hosts that heartbeat but never
+record a step time, previously invisible to straggler detection — as the
+``health.silent_hosts`` gauge.
+"""
 from __future__ import annotations
 
 import dataclasses
-import math
 import time
-from collections import deque
 from typing import Callable, Dict, List, Optional, Sequence
+
+from repro.obs import metrics as obs_metrics
 
 
 @dataclasses.dataclass
@@ -22,6 +32,9 @@ class HeartbeatMonitor:
 
     def beat(self, host: str):
         self._last[host] = self.clock()
+
+    def hosts(self) -> List[str]:
+        return sorted(self._last)
 
     def dead_hosts(self) -> List[str]:
         now = self.clock()
@@ -37,14 +50,38 @@ class HeartbeatMonitor:
 class StragglerDetector:
     """Rolling per-host step-time stats; flags hosts slower than
     ``threshold`` x the fleet median (the standard mitigation at scale is
-    to hot-swap the host or drop it at the next elastic boundary)."""
+    to hot-swap the host or drop it at the next elastic boundary).
+
+    Backed by ``obs.metrics.Histogram(window=window)`` per host — the
+    median is the histogram p50 (within one ~10% bucket of the exact
+    rolling median; straggler thresholds are 1.5x+, far coarser). With
+    ``registry`` set the histograms are registry-owned
+    (``<prefix>.<host>``) and appear in its snapshot.
+    """
     window: int = 32
     threshold: float = 1.5
-    _times: Dict[str, deque] = dataclasses.field(default_factory=dict)
+    registry: Optional[obs_metrics.Registry] = None
+    prefix: str = "health.step_s"
+    _hists: Dict[str, obs_metrics.Histogram] = dataclasses.field(
+        default_factory=dict)
+
+    def _hist(self, host: str) -> obs_metrics.Histogram:
+        h = self._hists.get(host)
+        if h is None:
+            if self.registry is not None:
+                h = self.registry.histogram(f"{self.prefix}.{host}",
+                                            window=self.window)
+            else:
+                h = obs_metrics.Histogram(host, window=self.window)
+            self._hists[host] = h
+        return h
 
     def record(self, host: str, step_time_s: float):
-        self._times.setdefault(
-            host, deque(maxlen=self.window)).append(step_time_s)
+        self._hist(host).record(step_time_s)
+
+    def hosts(self) -> List[str]:
+        """Hosts with at least one recorded step time."""
+        return sorted(h for h, hist in self._hists.items() if hist.count)
 
     def _median(self, xs: Sequence[float]) -> float:
         s = sorted(xs)
@@ -53,7 +90,8 @@ class StragglerDetector:
         return s[mid] if n % 2 else 0.5 * (s[mid - 1] + s[mid])
 
     def host_medians(self) -> Dict[str, float]:
-        return {h: self._median(ts) for h, ts in self._times.items() if ts}
+        return {h: hist.percentile(50)
+                for h, hist in self._hists.items() if hist.count}
 
     def stragglers(self) -> List[str]:
         med = self.host_medians()
@@ -76,17 +114,32 @@ class FailurePolicy:
 
     dead host      -> immediate remesh from last checkpoint
     stragglers     -> remesh at the next checkpoint boundary if persistent
+
+    ``poll`` also refreshes the ``health.silent_hosts`` gauge (count of
+    hosts the monitor has heartbeats for but the detector has never seen
+    a step time from): such a host is healthy by heartbeat and invisible
+    to the straggler median — the gauge is the only place it shows up.
     """
 
     def __init__(self, monitor: HeartbeatMonitor,
                  detector: StragglerDetector,
-                 persistence_steps: int = 100):
+                 persistence_steps: int = 100,
+                 registry: Optional[obs_metrics.Registry] = None):
         self.monitor = monitor
         self.detector = detector
         self.persistence = persistence_steps
+        self.registry = (registry if registry is not None
+                         else detector.registry) or obs_metrics.REGISTRY
         self._straggler_since: Dict[str, int] = {}
 
+    def silent_hosts(self) -> List[str]:
+        """Hosts that heartbeat but never recorded a step time."""
+        return sorted(set(self.monitor.hosts())
+                      - set(self.detector.hosts()))
+
     def poll(self, step: int) -> Optional[FailureEvent]:
+        self.registry.gauge("health.silent_hosts").set(
+            len(self.silent_hosts()))
         dead = self.monitor.dead_hosts()
         if dead:
             return FailureEvent("dead", tuple(dead), step)

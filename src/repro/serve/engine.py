@@ -29,6 +29,15 @@ per-request batch, not the frame. This engine is that idea on TPU/XLA:
     the bucket key grows ``(occupancy, sample_budget)`` (the budget
     changes the traced shapes), and ``stats()`` reports the live-sample
     fraction and dropped-sample count next to the effective Mpix/s.
+  * **Observability (DESIGN.md §8).** The engine owns an
+    ``repro.obs.metrics.Registry``: per-bucket ``submit``/``dispatch``/
+    ``block``/``slice`` phase histograms, a ``serve.compiles`` counter
+    fed by the trace-time side effect, and the submit→retire latency
+    histogram that ``stats()``'s p50/p99 now read (warmup excluded, as
+    before). When the process tracer (``repro.obs.trace.TRACER``) is
+    enabled the same phases are emitted as Chrome-trace spans; disabled
+    (the default) the submit path does exactly the ``perf_counter``
+    reads it always did — **no added device syncs**.
 
 Register all scenes, then ``warmup()`` (compiles each bucket once, outside
 the latency statistics), then submit the mixed request stream.
@@ -47,6 +56,8 @@ import numpy as np
 from repro.core import pipeline, render
 from repro.core.fields import FieldConfig
 from repro.core.pipeline import RenderSettings
+from repro.obs import metrics as obs_metrics
+from repro.obs.trace import TRACER
 from repro.serve import sharding
 
 
@@ -102,35 +113,44 @@ class Ticket:
             return True
 
     def __init__(self, engine: "RenderEngine", out, n_valid: int,
-                 t_submit: float, warmup: bool, aux=None):
+                 t_submit: float, warmup: bool, aux=None, bucket_idx=0):
         self._engine = engine
         self._out = out
         self._n = n_valid
         self._t_submit = t_submit
         self._warmup = warmup
         self._aux = aux              # (k, 3) [live, total, dropped] rows
+        self._bidx = bucket_idx
         self._res: Optional[np.ndarray] = None
         self._done = False
 
     def result(self) -> np.ndarray:
         if not self._done:
+            t_block0 = time.perf_counter()
             jax.block_until_ready(self._out)
             t_done = time.perf_counter()
             self.latency_s = t_done - self._t_submit
+            res = np.asarray(self._out)[:self._n]
+            t_slice = time.perf_counter()
             if not self._warmup:
                 self._engine._record(self.latency_s, self._n, t_done)
+                self._engine._record_phase(self._bidx, "block",
+                                           t_block0, t_done)
+                self._engine._record_phase(self._bidx, "slice",
+                                           t_done, t_slice)
                 if self._aux is not None:
                     self._engine._record_aux(
                         np.asarray(self._aux).sum(axis=0))
-            self._res = np.asarray(self._out)[:self._n]
+            self._res = res
             self._done = True
         return self._res
 
 
 class _Bucket:
-    def __init__(self, cfg: FieldConfig, key: BucketKey):
+    def __init__(self, cfg: FieldConfig, key: BucketKey, idx: int):
         self.cfg = cfg
         self.key = key
+        self.idx = idx                       # insertion index (metric label)
         self.order: List[str] = []           # scene names, stack order
         self.params: Dict[str, dict] = {}
         self.stacked = None                  # cached jnp.stack of params
@@ -139,10 +159,12 @@ class _Bucket:
 
 
 class RenderEngine:
-    """Shape-bucketed, multi-scene, async render server (DESIGN.md §3)."""
+    """Shape-bucketed, multi-scene, async render server (DESIGN.md §3;
+    observability contract in DESIGN.md §8)."""
 
     def __init__(self, settings: Optional[RenderSettings] = None,
-                 mesh=None, rules=None, max_inflight: int = 2):
+                 mesh=None, rules=None, max_inflight: int = 2,
+                 metrics_registry: Optional[obs_metrics.Registry] = None):
         self.settings = settings or RenderSettings()
         self.mesh = mesh
         self.rules = rules
@@ -154,10 +176,14 @@ class RenderEngine:
                     f"tile_pixels={self.settings.tile_pixels} not divisible"
                     f" by the mesh's {shards} pixel shards")
             sharding.check_sample_budget(self.settings, shards)
+        # per-engine registry: engines in one process (tests, A/B serving)
+        # must not mix latency histograms
+        self.obs = metrics_registry or obs_metrics.Registry()
+        self._lat_hist = self.obs.histogram("serve.latency_s")
         self._buckets: Dict[BucketKey, _Bucket] = {}
         self._scene_bucket: Dict[str, BucketKey] = {}
         self._inflight: collections.deque = collections.deque()
-        self._lat: List[float] = []
+        self._lat: List[float] = []          # exact latencies (compat view)
         self._pixels = 0
         self._t_first: Optional[float] = None
         self._t_last: Optional[float] = None
@@ -191,7 +217,8 @@ class RenderEngine:
                         sample_budget=self.settings.sample_budget)
         bucket = self._buckets.get(key)
         if bucket is None:
-            bucket = self._buckets[key] = _Bucket(cfg, key)
+            bucket = self._buckets[key] = _Bucket(cfg, key,
+                                                  len(self._buckets))
         bucket.order.append(name)
         bucket.params[name] = params
         bucket.stacked = None                # re-stack lazily
@@ -215,9 +242,11 @@ class RenderEngine:
             with_aux = self.settings.occupancy
             mtile = pipeline.make_multi_scene_tile_fn(
                 bucket.cfg, self.settings, with_aux=with_aux)
+            compiles = self.obs.counter("serve.compiles")
 
             def fn(stacked, scene_id, cam, pixel_ids, mask):
                 bucket.n_traces += 1     # python side effect: counts traces
+                compiles.inc()
                 out = mtile(stacked, scene_id, cam, pixel_ids)
                 if with_aux:
                     rgb, aux = out
@@ -232,7 +261,8 @@ class RenderEngine:
 
     def warmup(self) -> float:
         """Compile every bucket once (dummy request) — excluded from the
-        latency statistics, so p50/p99 measure serving, not XLA."""
+        latency statistics, so p50/p99 measure serving, not XLA (the
+        warmup-exclusion rule of ``obs.trace.time_fn``)."""
         t0 = time.perf_counter()
         cam = render.Camera(height=8, width=8, focal=8.0,
                             c2w=render.look_at((2.2, 1.6, 1.8), (0, 0, 0)))
@@ -250,6 +280,7 @@ class RenderEngine:
             raise KeyError(f"unknown scene {req.scene!r}")
         bucket = self._buckets[key]
         tp = self.settings.tile_pixels
+        t_prep0 = time.perf_counter()
         ids = np.asarray(req.pixel_ids, np.int32).ravel()
         n = ids.shape[0]
         if n > tp:
@@ -268,10 +299,18 @@ class RenderEngine:
             self._t_first = t0
         out = fn(stacked, sid, req.camera, jnp.asarray(padded),
                  jnp.asarray(mask))
+        t_dispatched = time.perf_counter()
         aux = None
         if self.settings.occupancy:
             out, aux = out
-        ticket = Ticket(self, out, n, t0, warmup=_warmup, aux=aux)
+        if not _warmup:
+            # host-side phase timings only: dispatch is the async XLA
+            # enqueue — nothing here blocks on the device
+            self._record_phase(bucket.idx, "submit", t_prep0, t0,
+                               scene=req.scene)
+            self._record_phase(bucket.idx, "dispatch", t0, t_dispatched)
+        ticket = Ticket(self, out, n, t0, warmup=_warmup, aux=aux,
+                        bucket_idx=bucket.idx)
         self._inflight.append(ticket)
         # retire already-finished work first so its recorded latency is
         # the device completion, not however long the caller sat on it
@@ -302,8 +341,19 @@ class RenderEngine:
     # ------------------------------------------------------------- stats
     def _record(self, latency_s: float, n_pixels: int, t_done: float):
         self._lat.append(latency_s)
+        self._lat_hist.record(latency_s)
+        self.obs.counter("serve.requests").inc()
+        self.obs.counter("serve.pixels").inc(n_pixels)
         self._pixels += n_pixels
         self._t_last = t_done
+
+    def _record_phase(self, bucket_idx: int, phase: str,
+                      t0: float, t1: float, **span_args):
+        self.obs.histogram(
+            f"serve.{phase}_s.bucket{bucket_idx}").record(t1 - t0)
+        if TRACER.enabled:
+            TRACER.add_event(f"serve.{phase}", t0, t1, cat="serve",
+                             bucket=bucket_idx, **span_args)
 
     def _record_aux(self, row: np.ndarray):
         self._samples += row
@@ -314,7 +364,10 @@ class RenderEngine:
     def total_traces(self) -> int:
         return sum(b.n_traces for b in self._buckets.values())
 
-    def stats(self) -> Dict:
+    def exact_percentiles(self, *ps: float) -> List[float]:
+        """Legacy exact order-statistic latencies (seconds) from the
+        compat sample list — the oracle the histogram-derived p50/p99 in
+        ``stats()`` are tested against (within one bucket width)."""
         lat = sorted(self._lat)
 
         def pct(p):
@@ -322,26 +375,31 @@ class RenderEngine:
                 return float("nan")
             return lat[min(len(lat) - 1, int(round(p / 100.0
                                                    * (len(lat) - 1))))]
+        return [pct(p) for p in ps]
 
+    def stats(self) -> Dict:
+        p50_s = self._lat_hist.percentile(50)
+        p99_s = self._lat_hist.percentile(99)
         wall = ((self._t_last - self._t_first)
                 if self._t_first is not None and self._t_last is not None
                 else 0.0)
         live, total, dropped = self._samples
+        n_req = len(self._lat)
         # effective Mpix/s is the *served* throughput — with culling on,
         # the same wall clock serves more pixels, so the win shows up
         # here directly; live_sample_frac explains where it came from.
         mpix = (self._pixels / wall / 1e6) if wall > 0 else float("nan")
         return {
-            "n_requests": len(lat),
-            "p50_ms": pct(50) * 1e3,
-            "p99_ms": pct(99) * 1e3,
+            "n_requests": n_req,
+            "p50_ms": p50_s * 1e3,
+            "p99_ms": p99_s * 1e3,
             "mpix_per_s": mpix,
             "effective_mpix_per_s": mpix,
             "live_sample_frac": (live / total) if total > 0
             else float("nan"),
             "samples_total": total,
             "samples_dropped": dropped,
-            "requests_per_s": (len(lat) / wall) if wall > 0
+            "requests_per_s": (n_req / wall) if wall > 0
             else float("nan"),
             "wall_s": wall,
             "pixels": self._pixels,
@@ -352,7 +410,8 @@ class RenderEngine:
                 f"/{k.dtype}/T{k.cfg.grid.log2_table_size}"
                 f"L{k.cfg.grid.n_levels}"
                 + (f"/occ-bgt{k.sample_budget}" if k.occupancy else "")
-                + f"#{i}": {
+                + f"#{b.idx}": {
                     "n_traces": b.n_traces, "n_scenes": len(b.order)}
-                for i, (k, b) in enumerate(self._buckets.items())},
+                for k, b in self._buckets.items()},
+            "metrics": self.obs.snapshot(),
         }

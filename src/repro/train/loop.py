@@ -32,6 +32,14 @@ run re-enters the same (start, length) chunk sequence as an
 uninterrupted run, so the two execute identical compiled programs on
 identical inputs — loss trajectories match bitwise, not just to
 tolerance (tests/test_train_engine.py).
+
+Observability (DESIGN.md §8): the engine owns an
+``repro.obs.metrics.Registry``; each completed chunk emits a
+``train.chunk`` span (when the process tracer is enabled), a
+``train.step_s`` histogram sample, and a structured log row, and the
+straggler detector's per-host step-time histograms live in the same
+registry (``health.step_s.<host>``) — one measurement substrate for
+health, metrics snapshots, and Chrome traces.
 """
 from __future__ import annotations
 
@@ -47,10 +55,15 @@ from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 from repro.checkpoint import store
 from repro.common import partitioning
+from repro.obs import log as obs_log
+from repro.obs import metrics as obs_metrics
+from repro.obs.trace import TRACER
 from repro.runtime.health import (FailurePolicy, HeartbeatMonitor,
                                   StragglerDetector)
 from repro.train import compression as compression_mod
 from repro.train import optim
+
+_LOG = obs_log.get_logger("train")
 
 
 @dataclasses.dataclass(frozen=True)
@@ -237,7 +250,8 @@ class TrainEngine:
                  detector: Optional[StragglerDetector] = None,
                  policy: Optional[FailurePolicy] = None,
                  on_event: Optional[Callable] = None,
-                 on_chunk_end: Optional[Callable] = None):
+                 on_chunk_end: Optional[Callable] = None,
+                 metrics_registry: Optional[obs_metrics.Registry] = None):
         if (device_batch_fn is None) == (host_batch_fn is None):
             raise ValueError(
                 "exactly one of device_batch_fn / host_batch_fn required")
@@ -248,13 +262,19 @@ class TrainEngine:
         self.state_shardings = state_shardings
         self.batch_shardings = batch_shardings
         self._stacked = _stack_shardings(batch_shardings)
+        # per-engine registry; the default straggler detector stores its
+        # per-host step-time histograms IN it (health.step_s.<host>), so
+        # straggler medians and the metrics snapshot read the same data
+        self.obs = metrics_registry or obs_metrics.Registry()
         self.monitor = monitor or HeartbeatMonitor(
             timeout_s=cfg.heartbeat_timeout_s)
-        self.detector = detector or StragglerDetector()
-        self.policy = policy or FailurePolicy(self.monitor, self.detector)
+        self.detector = detector or StragglerDetector(registry=self.obs)
+        self.policy = policy or FailurePolicy(self.monitor, self.detector,
+                                              registry=self.obs)
         self.on_event = on_event if on_event is not None else (
-            lambda ev: print(f"[train] failure event: {ev} — "
-                             f"see runtime/elastic.py"))
+            lambda ev: _LOG.warning("failure_event", kind=ev.kind,
+                                    hosts=list(ev.hosts), step=ev.step,
+                                    hint="see runtime/elastic.py"))
         # Fires once per completed chunk with (end_step, state) — the
         # natural cadence for auxiliary structures refreshed from the
         # live params (e.g. core.occupancy EMA updates, DESIGN.md §7)
@@ -342,7 +362,7 @@ class TrainEngine:
                 state = store.restore(cfg.ckpt_dir, sds, step=last,
                                       shardings=self.state_shardings)
                 start = last + 1
-                print(f"[train] resumed from step {last}")
+                _LOG.info("resumed", step=last, ckpt_dir=str(cfg.ckpt_dir))
 
         plan = chunk_plan(start, cfg.steps, cfg.chunk_steps)
         prefetch = (self._host_chunk_iter(plan)
@@ -350,6 +370,8 @@ class TrainEngine:
         history: List[Dict[str, float]] = []
         last_saved = start - 1
         try:
+            step_hist = self.obs.histogram("train.step_s")
+            steps_ctr = self.obs.counter("train.steps")
             for (s0, n) in plan:
                 chunk = self._chunk_fn(n)
                 t0 = time.perf_counter()
@@ -360,9 +382,20 @@ class TrainEngine:
                     state, stacked = chunk(state, jnp.int32(s0))
                 stacked = jax.device_get(stacked)
                 dt = time.perf_counter() - t0
+                # the device_get above is the chunk's natural sync point,
+                # so the span/histogram cover device completion without
+                # adding any block_until_ready of their own
+                if TRACER.enabled:
+                    TRACER.add_event("train.chunk", t0,
+                                     t0 + dt, cat="train",
+                                     start=s0, n_steps=n, host=self.host)
+                step_hist.record(dt / n)
+                steps_ctr.inc(n)
 
                 self.monitor.beat(self.host)
                 self.detector.record(self.host, dt / n)
+                _LOG.debug("chunk", start=s0, n_steps=n,
+                           step_ms=round(dt / n * 1e3, 3))
                 for i in range(n):
                     row = {k: float(v[i]) for k, v in stacked.items()}
                     row["step"] = s0 + i

@@ -65,6 +65,30 @@ def test_failure_policy_persistent_straggler():
         and ev.hosts == ("h1",)
 
 
+def test_silent_host_surfaces_as_gauge():
+    """A host that heartbeats but never records a step time is invisible
+    to the straggler median — poll() must surface it via the
+    health.silent_hosts gauge (DESIGN.md §8)."""
+    from repro.obs.metrics import Registry
+
+    reg = Registry()
+    mon = HeartbeatMonitor(timeout_s=1e9)
+    det = StragglerDetector(window=4, registry=reg)
+    pol = FailurePolicy(mon, det, registry=reg)
+    for h in ("h0", "h1", "h2"):
+        mon.beat(h)                 # h2 beats once but never steps
+    for _ in range(4):
+        det.record("h0", 1.0)
+        det.record("h1", 1.1)
+    assert pol.poll(step=0) is None          # healthy fleet otherwise
+    assert pol.silent_hosts() == ["h2"]
+    assert reg.snapshot()["gauges"]["health.silent_hosts"] == 1
+    det.record("h2", 1.0)                    # first step lands
+    pol.poll(step=1)
+    assert pol.silent_hosts() == []
+    assert reg.snapshot()["gauges"]["health.silent_hosts"] == 0
+
+
 def test_remesh_plan_prefers_same_tp():
     plan = remesh_plan(surviving_chips=192, old_data=16, old_model=16)
     assert plan.model == 16 and plan.data == 12
