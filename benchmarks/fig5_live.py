@@ -103,9 +103,11 @@ def run(csv: Csv, n_rays: int = 2048, n_requests: int = 6,
             # warmup request compiles all four phases; spans recorded
             # after clear() cover steady-state only (time_fn semantics)
             TRACER.enable(sync=True)
+            # repro: allow[host-sync] per-request sync is the measurement
             jax.block_until_ready(_serve_tile(fns, params, *reqs[0]))
             TRACER.clear()
             for cam, ids in reqs[1:]:
+                # repro: allow[host-sync] per-request sync is the measurement
                 jax.block_until_ready(_serve_tile(fns, params, cam, ids))
 
             totals = TRACER.phase_totals(cat="phase")

@@ -1,3 +1,4 @@
+# repro: allow-file[print] report generator: the markdown table IS its stdout
 """Regenerate the EXPERIMENTS.md roofline table from dryrun.json.
 
   PYTHONPATH=src python benchmarks/make_report.py

@@ -57,8 +57,10 @@ def main(argv=None) -> None:
             traceback.print_exc()
     csv.emit()
     if args.json_out:
+        from repro.obs import log as obs_log
+        log = obs_log.get_logger("bench")
         for p in csv.write_json(args.json_out):
-            print(f"wrote {p}")
+            log.info("artifact_written", path=str(p))
 
 
 if __name__ == "__main__":

@@ -62,6 +62,7 @@ def run(csv: Csv, n_scenes: int = 2, n_cameras: int = 3,
                 f"_p99ms={st['p99_ms']:.1f}"
                 f"_mpixs={st['mpix_per_s']:.2f}"
                 f"_compiles={st['n_traces_total']}")
+        # repro: allow[print] greppable stdout line the harness parses
         print("serve_engine_json " + json.dumps({"bench": name, **st}))
     run_culled(csv, n_scenes=n_scenes, n_cameras=n_cameras,
                n_requests=n_requests, tile=tile)

@@ -68,7 +68,7 @@ def run_scan_compare(csv: Csv, app: str = "gia", batch: int = 8192,
             params, opt, m = step_fn(params, opt, synth(i))
             if capture is not None:
                 capture.append(float(m["loss"]))
-        jax.block_until_ready(m["loss"])
+        jax.block_until_ready(m["loss"])  # repro: allow[host-sync] timing boundary
         return m
 
     run_perstep()                                    # compile

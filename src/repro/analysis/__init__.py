@@ -1,0 +1,19 @@
+"""repro-lint: JAX-aware static analysis of the stack's performance
+invariants (DESIGN.md §9).
+
+Two layers:
+  * AST rules (RA1xx, ``repro.analysis.ast_rules``) — pure-source lint:
+    host-sync leaks, traced branching, pytree-aux hazards, mutable
+    defaults on jitted entry points, stray print(), donated-buffer
+    reuse. No jax import needed.
+  * semantic rules (RJ2xx, ``repro.analysis.jax_rules``) — import the
+    live code and inspect tracing artifacts: the static VMEM estimator
+    over every Table-I kernel config, serve-bucket treedef stability,
+    TrainEngine donation.
+
+Run: ``python -m repro.analysis src benchmarks`` (or the ``repro-lint``
+entry point). Suppress with ``# repro: allow[rule] reason``; see
+``repro.analysis.registry`` for the full grammar.
+"""
+from repro.analysis.registry import (Finding, RULES, report,  # noqa: F401
+                                     rule_catalog, run_paths)

@@ -1,0 +1,525 @@
+"""Pure-AST rules (RA1xx): performance-invariant lint over the source.
+
+Scope model: every rule reasons per *function*. A function is
+
+  * jitted    — decorated with ``jax.jit`` (directly or via
+    ``functools.partial(jax.jit, static_argnames=...)``), or wrapped
+    anywhere in the same file as ``jax.jit(fn, ...)`` (the
+    ``chunk = jax.jit(chunk, donate_argnums=...)`` and
+    ``return jax.jit(fn)`` idioms). Parameters not named in
+    ``static_argnames`` are *traced*.
+  * hot-path  — marked ``# repro: hot-path`` (serve submit-side code
+    that must never synchronize with the device).
+  * boundary  — marked ``# repro: sync-boundary <reason>`` (a designated
+    host-sync point, ``Ticket.result``-style); the host-sync rule skips
+    its body.
+
+Taint: traced parameters are tainted; assignment propagates; reading
+``.shape/.ndim/.dtype/.size/.aval`` (trace-time-static metadata),
+``is``/``is not``/``in``/``not in`` comparisons, and ``len()``/
+``isinstance()``-style calls untaint. Closure variables are NOT tainted
+— ``if with_aux:`` in a jitted closure branches on a static Python
+value, which is exactly the pattern the serve engine relies on.
+"""
+from __future__ import annotations
+
+import ast
+from typing import Dict, Iterator, List, Optional, Sequence, Set, Tuple
+
+from repro.analysis.registry import Finding, FileContext, rule
+
+# attribute reads that yield trace-time-static metadata
+SAFE_ATTRS = {"shape", "ndim", "dtype", "size", "aval", "sharding"}
+# calls whose result is static regardless of argument taint
+STATIC_CALLS = {"len", "isinstance", "hasattr", "type", "getattr", "range"}
+# functions known to jit-wrap with buffer donation (method name -> donated
+# positional indices of the *returned callable*)
+KNOWN_DONATING = {"_chunk_fn": (0,)}
+
+
+def dotted(node: ast.AST) -> str:
+    """'jax.block_until_ready' for Attribute/Name chains, '' otherwise."""
+    parts: List[str] = []
+    while isinstance(node, ast.Attribute):
+        parts.append(node.attr)
+        node = node.value
+    if isinstance(node, ast.Name):
+        parts.append(node.id)
+        return ".".join(reversed(parts))
+    return ""
+
+
+def _const_str_seq(node: ast.AST) -> List[str]:
+    """Extract ('a', 'b') / ['a'] / 'a' string-constant values."""
+    if isinstance(node, ast.Constant) and isinstance(node.value, str):
+        return [node.value]
+    if isinstance(node, (ast.Tuple, ast.List)):
+        return [e.value for e in node.elts
+                if isinstance(e, ast.Constant) and isinstance(e.value, str)]
+    return []
+
+
+def _jit_call_info(call: ast.Call) -> Optional[Dict]:
+    """If ``call`` is ``jax.jit(...)`` / ``jit(...)`` or a
+    ``functools.partial(jax.jit, ...)``, return its static/donate info."""
+    name = dotted(call.func)
+    inner = None
+    if name in ("jax.jit", "jit"):
+        inner = call
+    elif name in ("functools.partial", "partial") and call.args:
+        if dotted(call.args[0]) in ("jax.jit", "jit"):
+            inner = call
+    if inner is None:
+        return None
+    static: List[str] = []
+    donate: Optional[Tuple[int, ...]] = None
+    for kw in inner.keywords:
+        if kw.arg == "static_argnames":
+            static = _const_str_seq(kw.value)
+        elif kw.arg == "donate_argnums":
+            vals = []
+            if isinstance(kw.value, ast.Constant):
+                vals = [kw.value.value]
+            elif isinstance(kw.value, (ast.Tuple, ast.List)):
+                vals = [e.value for e in kw.value.elts
+                        if isinstance(e, ast.Constant)]
+            # non-literal donate_argnums (e.g. a variable): assume (0,),
+            # the state-donation convention
+            donate = tuple(v for v in vals if isinstance(v, int)) or (0,)
+    return {"static_argnames": static, "donate_argnums": donate}
+
+
+class FunctionInfo:
+    def __init__(self, node: ast.FunctionDef, ctx: FileContext):
+        self.node = node
+        self.name = node.name
+        self.jitted = False
+        self.static_argnames: Set[str] = set()
+        self.hot = ctx.has_marker(ctx.hot_path_lines, node)
+        self.boundary = ctx.has_marker(ctx.boundary_lines, node)
+        for dec in node.decorator_list:
+            if isinstance(dec, ast.Call):
+                info = _jit_call_info(dec)
+                if info:
+                    self.jitted = True
+                    self.static_argnames |= set(info["static_argnames"])
+            elif dotted(dec) in ("jax.jit", "jit"):
+                self.jitted = True
+
+    def traced_params(self) -> Set[str]:
+        a = self.node.args
+        names = [p.arg for p in
+                 list(a.posonlyargs) + list(a.args) + list(a.kwonlyargs)]
+        return {n for n in names
+                if n not in self.static_argnames and n != "self"}
+
+
+def collect_functions(ctx: FileContext) -> List[FunctionInfo]:
+    """All function defs, with jit-wrapper calls (``jax.jit(fn, ...)``
+    anywhere in the file) matched back to same-file defs by name."""
+    infos: List[FunctionInfo] = []
+    by_name: Dict[str, List[FunctionInfo]] = {}
+    for node in ast.walk(ctx.tree):
+        if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+            fi = FunctionInfo(node, ctx)
+            infos.append(fi)
+            by_name.setdefault(fi.name, []).append(fi)
+    for node in ast.walk(ctx.tree):
+        if not isinstance(node, ast.Call):
+            continue
+        info = _jit_call_info(node)
+        if info is None:
+            continue
+        target = node.args[0] if node.args else None
+        if (dotted(node.func) in ("functools.partial", "partial")
+                and len(node.args) > 1):
+            target = node.args[1]
+        if isinstance(target, ast.Name):
+            for fi in by_name.get(target.id, []):
+                fi.jitted = True
+                fi.static_argnames |= set(info["static_argnames"])
+    return infos
+
+
+def _body_statements(fn: ast.FunctionDef) -> Iterator[ast.stmt]:
+    """Statements of ``fn`` in source order, NOT descending into nested
+    function/class defs (those are analyzed as their own scopes)."""
+    stack: List[ast.stmt] = list(reversed(fn.body))
+    while stack:
+        stmt = stack.pop()
+        yield stmt
+        if isinstance(stmt, (ast.FunctionDef, ast.AsyncFunctionDef,
+                             ast.ClassDef)):
+            continue
+        for field in ("body", "orelse", "finalbody"):
+            stack.extend(reversed(getattr(stmt, field, [])))
+        for h in getattr(stmt, "handlers", []):
+            stack.extend(reversed(h.body))
+
+
+def _scope_nodes(body: Sequence[ast.stmt]) -> Iterator[ast.AST]:
+    """Every AST node under ``body`` exactly once, pruning nested
+    function/class defs (each nested scope is analyzed separately)."""
+    stack: List[ast.AST] = list(body)
+    while stack:
+        node = stack.pop()
+        if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef,
+                             ast.ClassDef)):
+            continue
+        yield node
+        stack.extend(ast.iter_child_nodes(node))
+
+
+def _expr_taints(node: ast.AST, tainted: Set[str]) -> bool:
+    """Does evaluating ``node`` involve a tainted (traced) value?"""
+    if isinstance(node, ast.Name):
+        return node.id in tainted
+    if isinstance(node, ast.Attribute):
+        if node.attr in SAFE_ATTRS:
+            return False
+        return _expr_taints(node.value, tainted)
+    if isinstance(node, ast.Call):
+        if dotted(node.func) in STATIC_CALLS:
+            return False
+        return any(_expr_taints(a, tainted) for a in node.args) or any(
+            _expr_taints(kw.value, tainted) for kw in node.keywords) or (
+            _expr_taints(node.func, tainted))
+    if isinstance(node, ast.Compare):
+        if all(isinstance(op, (ast.Is, ast.IsNot, ast.In, ast.NotIn))
+               for op in node.ops):
+            return False
+        return (_expr_taints(node.left, tainted)
+                or any(_expr_taints(c, tainted) for c in node.comparators))
+    for child in ast.iter_child_nodes(node):
+        if _expr_taints(child, tainted):
+            return True
+    return False
+
+
+def _target_names(target: ast.AST) -> List[str]:
+    if isinstance(target, ast.Name):
+        return [target.id]
+    if isinstance(target, (ast.Tuple, ast.List)):
+        out: List[str] = []
+        for e in target.elts:
+            out.extend(_target_names(e))
+        return out
+    if isinstance(target, ast.Starred):
+        return _target_names(target.value)
+    return []
+
+
+def compute_taint(fn: FunctionInfo) -> Set[str]:
+    """Forward pass over the function body propagating traced-ness."""
+    tainted = set(fn.traced_params())
+    for stmt in _body_statements(fn.node):
+        if isinstance(stmt, ast.Assign):
+            hit = _expr_taints(stmt.value, tainted)
+            for t in stmt.targets:
+                for n in _target_names(t):
+                    (tainted.add if hit else tainted.discard)(n)
+        elif isinstance(stmt, ast.AnnAssign) and stmt.value is not None:
+            hit = _expr_taints(stmt.value, tainted)
+            for n in _target_names(stmt.target):
+                (tainted.add if hit else tainted.discard)(n)
+        elif isinstance(stmt, ast.AugAssign):
+            if _expr_taints(stmt.value, tainted):
+                tainted.update(_target_names(stmt.target))
+        elif isinstance(stmt, ast.For):
+            if _expr_taints(stmt.iter, tainted):
+                tainted.update(_target_names(stmt.target))
+    return tainted
+
+
+# --------------------------------------------------------------------- RA101
+_EXPLICIT_SYNCS = {"jax.block_until_ready": "forces a device sync",
+                   "jax.device_get": "copies device memory to host"}
+_CONVERSIONS = {"np.asarray", "np.array", "numpy.asarray", "numpy.array",
+                "onp.asarray", "onp.array"}
+
+
+@rule("host-sync", "RA101", "ast",
+      "Host-sync ops (block_until_ready / device_get / np.asarray / "
+      "float()/.item() on traced values) inside jitted or serve-hot-path "
+      "functions, and explicit sync calls outside designated "
+      "'# repro: sync-boundary' functions.")
+def check_host_sync(ctx: FileContext) -> Iterator[Finding]:
+    for fn in collect_functions(ctx):
+        if fn.boundary:
+            continue
+        tainted = compute_taint(fn) if fn.jitted else set()
+        for node in _scope_nodes(fn.node.body):
+            if isinstance(node, ast.Call):
+                yield from _check_sync_call(ctx, node, fn, tainted)
+
+    # module-level statements (script bodies): explicit syncs only
+    class _Module:
+        jitted = hot = boundary = False
+    for node in _scope_nodes(ctx.tree.body):
+        if isinstance(node, ast.Call):
+            yield from _check_sync_call(ctx, node, _Module, set())
+
+
+def _check_sync_call(ctx: FileContext, node: ast.Call, fn: FunctionInfo,
+                     tainted: Set[str]) -> Iterator[Finding]:
+    name = dotted(node.func)
+    where = ("jitted" if fn.jitted else
+             "hot-path" if fn.hot else "host")
+
+    if name in _EXPLICIT_SYNCS:
+        yield Finding(
+            rule="host-sync", code="RA101", path=ctx.path, line=node.lineno,
+            message=(f"{name}() {_EXPLICIT_SYNCS[name]} — mark the function "
+                     f"'# repro: sync-boundary <reason>' if this is a "
+                     f"designated boundary, or allow[host-sync] the line"))
+        return
+    if (isinstance(node.func, ast.Attribute)
+            and node.func.attr == "block_until_ready"):
+        yield Finding(
+            rule="host-sync", code="RA101", path=ctx.path, line=node.lineno,
+            message=(".block_until_ready() forces a device sync — mark the "
+                     "function '# repro: sync-boundary <reason>' or "
+                     "allow[host-sync] the line"))
+        return
+
+    if not (fn.jitted or fn.hot):
+        return
+    args_taint = (not fn.jitted) or any(
+        _expr_taints(a, tainted) for a in node.args)
+    if name in _CONVERSIONS and args_taint:
+        yield Finding(
+            rule="host-sync", code="RA101", path=ctx.path, line=node.lineno,
+            message=(f"{name}() on a traced value in a {where} function "
+                     f"forces device->host transfer (use jnp.asarray, or "
+                     f"move the conversion to a sync boundary)"))
+    elif (fn.jitted and name in ("float", "int") and node.args
+          and _expr_taints(node.args[0], tainted)):
+        yield Finding(
+            rule="host-sync", code="RA101", path=ctx.path, line=node.lineno,
+            message=(f"{name}() on a traced value concretizes it at trace "
+                     f"time (TracerConversionError at runtime, or a hidden "
+                     f"sync)"))
+    elif (isinstance(node.func, ast.Attribute) and node.func.attr == "item"
+          and (not fn.jitted or _expr_taints(node.func.value, tainted))):
+        yield Finding(
+            rule="host-sync", code="RA101", path=ctx.path, line=node.lineno,
+            message=(f".item() in a {where} function pulls a scalar to "
+                     f"host — a per-call device sync"))
+
+
+# --------------------------------------------------------------------- RA102
+@rule("traced-branch", "RA102", "ast",
+      "Python `if`/`while` on a traced value inside a jitted function — "
+      "concretization error or silent retrace; use lax.cond/lax.select.")
+def check_traced_branch(ctx: FileContext) -> Iterator[Finding]:
+    for fn in collect_functions(ctx):
+        if not fn.jitted:
+            continue
+        tainted = compute_taint(fn)
+        if not tainted:
+            continue
+        for stmt in _body_statements(fn.node):
+            if isinstance(stmt, (ast.If, ast.While)) and _expr_taints(
+                    stmt.test, tainted):
+                kind = "if" if isinstance(stmt, ast.If) else "while"
+                yield Finding(
+                    rule="traced-branch", code="RA102", path=ctx.path,
+                    line=stmt.lineno,
+                    message=(f"Python `{kind}` on a traced value in jitted "
+                             f"function {fn.name!r} — use jax.lax.cond / "
+                             f"jnp.where, or make the operand a "
+                             f"static_argname"))
+
+
+# --------------------------------------------------------------------- RA103
+_UNHASHABLE_DISPLAYS = (ast.List, ast.Dict, ast.Set, ast.ListComp,
+                        ast.DictComp, ast.SetComp)
+_UNHASHABLE_CALLS = {"list", "dict", "set", "bytearray"}
+
+
+@rule("pytree-aux", "RA103", "ast",
+      "tree_flatten aux_data that is a list/dict/set — aux_data is hashed "
+      "and compared by jit's cache, so it must be hashable and static "
+      "(the Camera contract: aux=None).")
+def check_pytree_aux(ctx: FileContext) -> Iterator[Finding]:
+    for node in ast.walk(ctx.tree):
+        if not isinstance(node, ast.ClassDef):
+            continue
+        registered = any(
+            "register_pytree" in dotted(d if not isinstance(d, ast.Call)
+                                        else d.func)
+            for d in node.decorator_list)
+        if not registered:
+            continue
+        flat = next((m for m in node.body
+                     if isinstance(m, ast.FunctionDef)
+                     and m.name == "tree_flatten"), None)
+        if flat is None:
+            continue
+        for ret in ast.walk(flat):
+            if not isinstance(ret, ast.Return) or ret.value is None:
+                continue
+            if not (isinstance(ret.value, ast.Tuple)
+                    and len(ret.value.elts) == 2):
+                continue
+            aux = ret.value.elts[1]
+            bad = (isinstance(aux, _UNHASHABLE_DISPLAYS)
+                   or (isinstance(aux, ast.Call)
+                       and dotted(aux.func) in _UNHASHABLE_CALLS))
+            if bad:
+                yield Finding(
+                    rule="pytree-aux", code="RA103", path=ctx.path,
+                    line=ret.lineno,
+                    message=(f"{node.name}.tree_flatten returns unhashable "
+                             f"aux_data — jit hashes aux_data for its trace "
+                             f"cache; return None or a hashable tuple"))
+
+
+# --------------------------------------------------------------------- RA104
+@rule("mutable-default", "RA104", "ast",
+      "Mutable default argument ([] / {} / set()). On a jitted entry "
+      "point the default's identity leaks into the trace cache key; "
+      "elsewhere it is shared across calls.")
+def check_mutable_default(ctx: FileContext) -> Iterator[Finding]:
+    for fn in collect_functions(ctx):
+        a = fn.node.args
+        for d in list(a.defaults) + [d for d in a.kw_defaults if d]:
+            bad = (isinstance(d, _UNHASHABLE_DISPLAYS)
+                   or (isinstance(d, ast.Call)
+                       and dotted(d.func) in _UNHASHABLE_CALLS))
+            if bad:
+                yield Finding(
+                    rule="mutable-default", code="RA104", path=ctx.path,
+                    line=d.lineno,
+                    severity="error" if fn.jitted else "warning",
+                    message=(f"mutable default argument in "
+                             f"{'jitted ' if fn.jitted else ''}function "
+                             f"{fn.name!r} — use None and construct inside"))
+
+
+# --------------------------------------------------------------------- RA105
+@rule("print", "RA105", "ast",
+      "print() outside repro.obs.log — stdout writes bypass the "
+      "structured logger (and sync implicitly when printing arrays).")
+def check_print(ctx: FileContext) -> Iterator[Finding]:
+    path = ctx.path.replace("\\", "/")
+    if path.endswith("obs/log.py"):
+        return
+    for node in ast.walk(ctx.tree):
+        if (isinstance(node, ast.Call) and isinstance(node.func, ast.Name)
+                and node.func.id == "print"):
+            yield Finding(
+                rule="print", code="RA105", path=ctx.path, line=node.lineno,
+                message=("print() outside obs/log — use "
+                         "repro.obs.log (or allow[print] with a reason for "
+                         "stdout-contract output)"))
+
+
+# --------------------------------------------------------------------- RA106
+@rule("donated-reuse", "RA106", "ast",
+      "Reading a buffer after passing it to a donating jitted call "
+      "(donate_argnums) — donated buffers are invalidated; rebind the "
+      "result (`state = chunk(state, ...)`).")
+def check_donated_reuse(ctx: FileContext) -> Iterator[Finding]:
+    for fn in collect_functions(ctx):
+        yield from _donated_reuse_in(ctx, fn.node)
+
+
+def _donating_callables(fn: ast.FunctionDef) -> Dict[str, Tuple[int, ...]]:
+    """name -> donated positional indices, from assignments in ``fn``."""
+    out: Dict[str, Tuple[int, ...]] = {}
+    for stmt in _body_statements(fn):
+        if not isinstance(stmt, ast.Assign) or not isinstance(
+                stmt.value, ast.Call):
+            continue
+        call = stmt.value
+        names = _target_names(stmt.targets[0]) if stmt.targets else []
+        if not names:
+            continue
+        info = _jit_call_info(call)
+        if info and info["donate_argnums"]:
+            out[names[0]] = info["donate_argnums"]
+            continue
+        callee = dotted(call.func)
+        for known, donate in KNOWN_DONATING.items():
+            if callee.endswith(known):
+                out[names[0]] = donate
+    return out
+
+
+def _donated_reuse_in(ctx: FileContext,
+                      fn: ast.FunctionDef) -> Iterator[Finding]:
+    donating = _donating_callables(fn)
+    if not donating:
+        return
+    yield from _scan_seq(ctx, fn.body, donating, {})
+
+
+def _stmt_stores(stmt: ast.stmt) -> Set[str]:
+    out: Set[str] = set()
+    if isinstance(stmt, ast.Assign):
+        for t in stmt.targets:
+            out.update(_target_names(t))
+    elif isinstance(stmt, (ast.AnnAssign, ast.AugAssign)):
+        out.update(_target_names(stmt.target))
+    return out
+
+
+def _scan_seq(ctx: FileContext, body: Sequence[ast.stmt],
+              donating: Dict[str, Tuple[int, ...]],
+              dead: Dict[str, int]) -> Iterator[Finding]:
+    """Linear scan of one statement sequence. ``dead`` maps a donated
+    name to the donating call's line; loads of dead names are findings.
+    Compound statements recurse with a copy of ``dead``; donations made
+    inside them do not escape (a loop's same-statement rebinding —
+    ``state, out = chunk(state, ...)`` — makes per-iteration analysis
+    the precise one, and not escaping keeps false positives at zero)."""
+    for stmt in body:
+        if isinstance(stmt, (ast.FunctionDef, ast.AsyncFunctionDef,
+                             ast.ClassDef)):
+            continue
+        subseqs = [getattr(stmt, f, []) for f in
+                   ("body", "orelse", "finalbody")]
+        subseqs += [h.body for h in getattr(stmt, "handlers", [])]
+        if any(subseqs):
+            for seq in subseqs:
+                if seq:
+                    yield from _scan_seq(ctx, seq, donating, dict(dead))
+            # anything stored anywhere inside revives the name
+            for node in ast.walk(stmt):
+                if isinstance(node, ast.Name) and isinstance(
+                        node.ctx, ast.Store):
+                    dead.pop(node.id, None)
+            continue
+
+        rebound = _stmt_stores(stmt)
+        for node in ast.walk(stmt):
+            if (isinstance(node, ast.Name)
+                    and isinstance(node.ctx, ast.Load)
+                    and node.id in dead):
+                call_line = dead[node.id]
+                if node.lineno == call_line:
+                    continue   # the donating call's own argument load
+                yield Finding(
+                    rule="donated-reuse", code="RA106", path=ctx.path,
+                    line=node.lineno,
+                    message=(f"{node.id!r} was donated to a jitted call at "
+                             f"line {call_line} (donate_argnums) and read "
+                             f"again — donated buffers are invalidated; "
+                             f"rebind the result instead"))
+                dead.pop(node.id, None)
+        for name in rebound:
+            dead.pop(name, None)
+
+        for node in ast.walk(stmt):
+            if not isinstance(node, ast.Call):
+                continue
+            callee = node.func.id if isinstance(node.func, ast.Name) else ""
+            if callee not in donating:
+                continue
+            for pos in donating[callee]:
+                if pos < len(node.args) and isinstance(
+                        node.args[pos], ast.Name):
+                    name = node.args[pos].id
+                    if name not in rebound:
+                        dead[name] = node.lineno

@@ -1,0 +1,157 @@
+"""Static VMEM estimator for the four Pallas kernels (rule RJ201).
+
+Computes the per-grid-step VMEM-resident bytes of every Table-I
+``(app, encoding)`` configuration at f32 and bf16 table dtype, for each
+kernel, directly from the kernels' own ``vmem_plan()`` functions — which
+mirror the ``pallas_call`` BlockSpecs one-for-one and share their byte
+formula with the runtime group picker (``kernels.common``). If the
+kernels' tiling and this estimator ever disagree, the agreement test in
+``tests/test_analysis.py`` fails.
+
+The budget contract matches the runtime's (kernels/common.py): the
+streamed *table block* must fit ``vmem_budget_bytes`` (half a core by
+default, leaving headroom for the other blocks plus Pallas double
+buffering), and the total resident set must fit the core's VMEM.
+
+Verdicts per estimate:
+  * fits           — table block <= budget and total <= core VMEM.
+  * degraded       — the level-group picker already hit its floor (g=1)
+    and even one level exceeds the budget. This is the *documented*
+    degrade (DESIGN.md §2: gia's log2_T=24 tables, and the tiled
+    encoding's 16 MB f32 levels; row-tiling within a level is the
+    follow-up); reported as a WARNING, not an error.
+  * over-budget    — the table block exceeds the budget at a group size
+    the picker would not have chosen, i.e. the kernel plan and
+    ``pick_level_group`` drifted. ERROR.
+  * over-core      — the non-table blocks alone blow the 16 MB core.
+    ERROR.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import List, Optional
+
+import jax.numpy as jnp
+
+from repro.analysis.registry import Finding
+from repro.configs.registry import FIELD_APPS, FIELD_ENCODINGS
+from repro.core.fields import make_field_config
+from repro.kernels import common as kcommon
+
+
+@dataclasses.dataclass
+class KernelEstimate:
+    """VMEM accounting of one (kernel, config, dtype) combination."""
+    kernel: str                  # 'hashgrid' | 'fused_mlp' | 'fused_field'
+                                 # | 'ray_march'
+    app: str
+    encoding: str
+    dtype: str
+    level_group: Optional[int]   # None for kernels without table streaming
+    blocks: List                 # [(name, shape, bytes), ...]
+    total_bytes: int
+    table_block_bytes: Optional[int]
+    budget_bytes: int
+
+    @property
+    def verdict(self) -> str:
+        if (self.table_block_bytes is not None
+                and self.table_block_bytes > self.budget_bytes):
+            return "degraded" if self.level_group == 1 else "over-budget"
+        if self.total_bytes > kcommon.VMEM_BYTES_PER_CORE:
+            return "over-core"
+        return "fits"
+
+
+def _materialize(kernel: str, app: str, encoding: str, dtype,
+                 level_group, plan, budget: int) -> KernelEstimate:
+    blocks = [(name, tuple(int(s) for s in shape),
+               kcommon.block_bytes(shape, dt))
+              for name, shape, dt in plan]
+    tbytes = next((b for n, _, b in blocks if n == "tables"), None)
+    return KernelEstimate(
+        kernel=kernel, app=app, encoding=encoding,
+        dtype=jnp.dtype(dtype).name, level_group=level_group,
+        blocks=blocks, total_bytes=sum(b for _, _, b in blocks),
+        table_block_bytes=tbytes, budget_bytes=budget)
+
+
+def estimate_config(app: str, encoding: str, dtype,
+                    vmem_budget_bytes: Optional[int] = None
+                    ) -> List[KernelEstimate]:
+    """Estimates for all four kernels under one Table-I config."""
+    from repro.kernels.fused_field import fused_field
+    from repro.kernels.fused_mlp import fused_mlp
+    from repro.kernels.hashgrid import hashgrid
+    from repro.kernels.ray_march import ray_march
+
+    budget = (vmem_budget_bytes if vmem_budget_bytes is not None
+              else kcommon.DEFAULT_VMEM_BUDGET_BYTES)
+    cfg = make_field_config(app, encoding)
+    mlp_cfg = cfg.density_mlp if cfg.app == "nerf" else cfg.mlp
+
+    out: List[KernelEstimate] = []
+    g, plan = hashgrid.vmem_plan(cfg.grid, dtype,
+                                 vmem_budget_bytes=vmem_budget_bytes)
+    out.append(_materialize("hashgrid", app, encoding, dtype, g, plan, budget))
+
+    plan = fused_mlp.vmem_plan(mlp_cfg, dtype)
+    out.append(_materialize("fused_mlp", app, encoding, dtype, None, plan,
+                            budget))
+
+    g, plan = fused_field.vmem_plan(cfg.grid, mlp_cfg, dtype,
+                                    vmem_budget_bytes=vmem_budget_bytes)
+    out.append(_materialize("fused_field", app, encoding, dtype, g, plan,
+                            budget))
+
+    plan = ray_march.vmem_plan(n_samples=128, dtype=jnp.float32)
+    out.append(_materialize("ray_march", app, encoding, jnp.float32, None,
+                            plan, budget))
+    return out
+
+
+def table1_estimates(vmem_budget_bytes: Optional[int] = None
+                     ) -> List[KernelEstimate]:
+    """All 12 Table-I configs x {f32, bf16} table dtype x 4 kernels."""
+    out: List[KernelEstimate] = []
+    for app in FIELD_APPS:
+        for encoding in FIELD_ENCODINGS:
+            for dtype in (jnp.float32, jnp.bfloat16):
+                out.extend(estimate_config(app, encoding, dtype,
+                                           vmem_budget_bytes))
+    return out
+
+
+def check_vmem(vmem_budget_bytes: Optional[int] = None) -> List[Finding]:
+    """RJ201 findings: over-budget plans are errors, documented g=1
+    degrades are warnings."""
+    findings: List[Finding] = []
+    for est in table1_estimates(vmem_budget_bytes):
+        if est.verdict == "fits":
+            continue
+        mb = est.total_bytes / 2**20
+        bmb = est.budget_bytes / 2**20
+        where = f"{est.kernel}[{est.app}/{est.encoding}/{est.dtype}]"
+        if est.verdict == "degraded":
+            tmb = est.table_block_bytes / 2**20
+            findings.append(Finding(
+                rule="vmem-budget", code="RJ201", path=where, line=0,
+                severity="warning",
+                message=(f"one level's table block is {tmb:.1f} MB — over "
+                         f"the {bmb:.1f} MB budget even at the level-group "
+                         f"floor g=1; documented degrade (DESIGN.md §2: "
+                         f"row-tiling within a level is the follow-up)")))
+        elif est.verdict == "over-budget":
+            tmb = est.table_block_bytes / 2**20
+            findings.append(Finding(
+                rule="vmem-budget", code="RJ201", path=where, line=0,
+                message=(f"table block {tmb:.1f} MB exceeds the {bmb:.1f} MB "
+                         f"budget at level_group={est.level_group} — kernel "
+                         f"plan and pick_level_group have drifted")))
+        else:
+            core = kcommon.VMEM_BYTES_PER_CORE / 2**20
+            findings.append(Finding(
+                rule="vmem-budget", code="RJ201", path=where, line=0,
+                message=(f"total resident blocks {mb:.1f} MB exceed the "
+                         f"{core:.0f} MB core VMEM")))
+    return findings

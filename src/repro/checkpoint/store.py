@@ -61,6 +61,7 @@ def save(tree: Any, step: int, directory: str | os.PathLike,
     manifest = {"step": step, "leaves": [], "meta": extra_meta or {}}
     try:
         for i, (name, leaf) in enumerate(leaves):
+            # repro: allow[host-sync] checkpointing is a host snapshot by design
             arr = np.asarray(jax.device_get(leaf))
             fn = _leaf_filename(i)
             np.save(tmp / fn, arr, allow_pickle=False)
@@ -160,6 +161,7 @@ class AsyncCheckpointer:
     def save(self, tree: Any, step: int, extra_meta=None):
         self.wait()                      # at most one outstanding save
         # snapshot to host BEFORE returning control (cheap vs serialize)
+        # repro: allow[host-sync] the pre-donation host snapshot is the point
         host_tree = jax.tree.map(lambda x: np.asarray(jax.device_get(x)),
                                  tree)
 

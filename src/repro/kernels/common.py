@@ -37,14 +37,37 @@ def round_up(x: int, m: int) -> int:
 # group size is the largest one whose table block fits this budget. The
 # default is half the core's VMEM so the point/feature/weight blocks and
 # Pallas's double-buffering always have headroom.
+#
+# This accounting is a *checked* contract: the static analysis suite
+# (repro.analysis, DESIGN.md §9, rule RJ201 vmem-budget) recomputes the
+# resident bytes of every Table-I kernel configuration from the kernels'
+# BlockSpecs + grids and fails the lint gate if any config exceeds the
+# budget. ``table_block_bytes`` below is the ONE shared formula — the
+# runtime group picker and the static estimator both call it, and it
+# reads the shape off the hashgrid kernel's actual BlockSpec, so the
+# checker and the kernel tiling cannot drift.
 VMEM_BYTES_PER_CORE = 16 * 1024 * 1024
 DEFAULT_VMEM_BUDGET_BYTES = VMEM_BYTES_PER_CORE // 2
 
 
+def block_bytes(block_shape, dtype) -> int:
+    """VMEM bytes of one resident block of ``block_shape`` and ``dtype``."""
+    n = 1
+    for s in block_shape:
+        n *= int(s)
+    return n * jnp.dtype(dtype).itemsize
+
+
 def table_block_bytes(cfg, level_group: int, dtype) -> int:
-    """VMEM bytes of one (level_group, T, F) table block."""
-    return (level_group * cfg.table_size * cfg.n_features
-            * jnp.dtype(dtype).itemsize)
+    """VMEM bytes of one (level_group, T, F) table block.
+
+    Derived from the hashgrid kernel's ``table_block_spec`` (the
+    BlockSpec the ``pallas_call`` actually runs with) rather than a
+    parallel hand-written product — the runtime picker
+    (:func:`pick_level_group`) and the static VMEM estimator
+    (``repro.analysis.vmem``) therefore share one source of truth."""
+    from repro.kernels.hashgrid.hashgrid import table_block_spec
+    return block_bytes(table_block_spec(cfg, level_group).block_shape, dtype)
 
 
 def pick_level_group(cfg, dtype, vmem_budget_bytes: int | None = None) -> int:

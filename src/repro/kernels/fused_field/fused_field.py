@@ -28,10 +28,10 @@ from jax.experimental.pallas import tpu as pltpu
 
 from repro.core.encoding import GridConfig
 from repro.core.mlp import MLPConfig
-from repro.kernels.common import (default_interpret, pick_level_group,
-                                  round_up)
-from repro.kernels.fused_mlp.fused_mlp import pad_dim
-from repro.kernels.hashgrid.hashgrid import encode_one_level, level_meta
+from repro.kernels.common import default_interpret, pick_level_group
+from repro.kernels.fused_mlp.fused_mlp import pad_dim, padded_dims
+from repro.kernels.hashgrid.hashgrid import (encode_one_level, level_meta,
+                                             table_block_spec)
 
 
 def _field_kernel(meta_ref, points_ref, tables_ref, w_in_ref, w_hid_ref,
@@ -67,6 +67,30 @@ def _field_kernel(meta_ref, points_ref, tables_ref, w_in_ref, w_hid_ref,
             preferred_element_type=jnp.float32).astype(out_ref.dtype)
 
 
+def vmem_plan(grid_cfg: GridConfig, mlp_cfg: MLPConfig, dtype, *,
+              block_b: int = 512, level_group: int | None = None,
+              vmem_budget_bytes: int | None = None, mxu_align: int = 128):
+    """Per-grid-step VMEM-resident blocks of :func:`fused_field_pallas`.
+
+    Returns ``(level_group, [(name, block_shape, dtype), ...])``: the
+    streamed point/table/out blocks, the pinned (index-map-constant)
+    MLP weight blocks, and the persistent feature scratch — mirroring
+    the ``pallas_call``'s in/out/scratch specs one-for-one. Consumed by
+    the static VMEM estimator (repro.analysis.vmem, DESIGN.md §9)."""
+    g = (level_group if level_group is not None
+         else pick_level_group(grid_cfg, dtype, vmem_budget_bytes))
+    din, hdim, dout, n_hid_stack = padded_dims(mlp_cfg, mxu_align)
+    return g, [
+        ("points", (block_b, grid_cfg.dim), jnp.float32),
+        ("tables", table_block_spec(grid_cfg, g).block_shape, dtype),
+        ("w_in", (din, hdim), dtype),
+        ("w_hidden", (n_hid_stack, hdim, hdim), dtype),
+        ("w_out", (hdim, dout), dtype),
+        ("out", (block_b, dout), jnp.float32),
+        ("feat_scratch", (block_b, din), jnp.float32),
+    ]
+
+
 def fused_field_pallas(points: jnp.ndarray, tables: jnp.ndarray,
                        w_in: jnp.ndarray, w_hidden: jnp.ndarray,
                        w_out: jnp.ndarray, grid_cfg: GridConfig,
@@ -90,10 +114,7 @@ def fused_field_pallas(points: jnp.ndarray, tables: jnp.ndarray,
     assert grid_cfg.n_levels % g == 0, (grid_cfg.n_levels, g)
     n_groups = grid_cfg.n_levels // g
 
-    din = round_up(mlp_cfg.in_dim, mxu_align)
-    hdim = round_up(mlp_cfg.hidden_dim, mxu_align)
-    dout = round_up(mlp_cfg.out_dim, mxu_align)
-    n_hid_stack = max(mlp_cfg.n_hidden - 1, 1)
+    din, hdim, dout, n_hid_stack = padded_dims(mlp_cfg, mxu_align)
 
     w_in_p = pad_dim(w_in, din, hdim)
     w_hid_p = (pad_dim(w_hidden, hdim, hdim) if mlp_cfg.n_hidden > 1
@@ -114,7 +135,7 @@ def fused_field_pallas(points: jnp.ndarray, tables: jnp.ndarray,
         in_specs=[
             pl.BlockSpec(memory_space=pltpu.SMEM),       # level meta
             pl.BlockSpec((block_b, grid_cfg.dim), lambda i, j: (i, 0)),
-            pl.BlockSpec((g, grid_cfg.table_size, grid_cfg.n_features),
+            pl.BlockSpec(table_block_spec(grid_cfg, g).block_shape,
                          lambda i, j: (j, 0, 0)),        # grid_sram block
             pl.BlockSpec((din, hdim), lambda i, j: (0, 0)),
             pl.BlockSpec((n_hid_stack, hdim, hdim), lambda i, j: (0, 0, 0)),

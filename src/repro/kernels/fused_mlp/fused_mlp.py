@@ -46,6 +46,31 @@ def pad_dim(w: jnp.ndarray, rows: int, cols: int) -> jnp.ndarray:
     return jnp.pad(w, pad)
 
 
+def padded_dims(cfg: MLPConfig, mxu_align: int = 128):
+    """(din, hdim, dout, n_hid_stack): the MXU-aligned dims the kernel
+    pads to. One definition shared by the ``pallas_call`` BlockSpecs and
+    the static VMEM estimator (repro.analysis.vmem, DESIGN.md §9)."""
+    return (round_up(cfg.in_dim, mxu_align),
+            round_up(cfg.hidden_dim, mxu_align),
+            round_up(cfg.out_dim, mxu_align),
+            max(cfg.n_hidden - 1, 1))
+
+
+def vmem_plan(cfg: MLPConfig, dtype, *, block_b: int = 512,
+              mxu_align: int = 128):
+    """Per-grid-step VMEM-resident blocks of :func:`fused_mlp_pallas` as
+    ``[(name, block_shape, dtype), ...]`` (weights are index-map-pinned,
+    so every block listed is resident on every step)."""
+    din, h, dout, n_hid_stack = padded_dims(cfg, mxu_align)
+    return [
+        ("x", (block_b, din), jnp.float32),
+        ("w_in", (din, h), dtype),
+        ("w_hidden", (n_hid_stack, h, h), dtype),
+        ("w_out", (h, dout), dtype),
+        ("out", (block_b, dout), jnp.float32),
+    ]
+
+
 def fused_mlp_pallas(x: jnp.ndarray, w_in: jnp.ndarray, w_hidden: jnp.ndarray,
                      w_out: jnp.ndarray, cfg: MLPConfig, *,
                      block_b: int = 512, interpret: bool | None = None,
@@ -59,10 +84,7 @@ def fused_mlp_pallas(x: jnp.ndarray, w_in: jnp.ndarray, w_hidden: jnp.ndarray,
         interpret = default_interpret()
     b = x.shape[0]
     assert b % block_b == 0, (b, block_b)
-    din = round_up(cfg.in_dim, mxu_align)
-    h = round_up(cfg.hidden_dim, mxu_align)
-    dout = round_up(cfg.out_dim, mxu_align)
-    n_hid_stack = max(cfg.n_hidden - 1, 1)
+    din, h, dout, n_hid_stack = padded_dims(cfg, mxu_align)
 
     xp = jnp.pad(x, ((0, 0), (0, din - cfg.in_dim)))
     w_in_p = pad_dim(w_in, din, h)

@@ -44,9 +44,31 @@ def level_meta(cfg: GridConfig) -> jnp.ndarray:
 
 
 def table_block_spec(cfg: GridConfig, level_group: int) -> pl.BlockSpec:
-    """The per-level-group table BlockSpec: (g, T, F) resident per step."""
+    """The per-level-group table BlockSpec: (g, T, F) resident per step.
+
+    This is the shape ``kernels.common.table_block_bytes`` — and through
+    it both ``pick_level_group`` and the static VMEM estimator
+    (``repro.analysis.vmem``, DESIGN.md §9 rule RJ201) — account
+    against the VMEM budget: one BlockSpec, one byte formula."""
     return pl.BlockSpec((level_group, cfg.table_size, cfg.n_features),
                         lambda j, i: (j, 0, 0))
+
+
+def vmem_plan(cfg: GridConfig, dtype, *, block_b: int = 1024,
+              level_group: int | None = None,
+              vmem_budget_bytes: int | None = None):
+    """Per-grid-step VMEM-resident blocks of :func:`hashgrid_encode_pallas`.
+
+    Returns ``(level_group, [(name, block_shape, dtype), ...])`` mirroring
+    the ``pallas_call``'s in/out specs (the SMEM level-meta table is
+    excluded — it is not VMEM). Consumed by the static VMEM estimator."""
+    g = (level_group if level_group is not None
+         else pick_level_group(cfg, dtype, vmem_budget_bytes))
+    return g, [
+        ("points", (block_b, cfg.dim), jnp.float32),
+        ("tables", table_block_spec(cfg, g).block_shape, dtype),
+        ("out", (block_b, g * cfg.n_features), jnp.float32),
+    ]
 
 
 def encode_one_level(pts, tab, meta_ref, level, *, cfg: GridConfig

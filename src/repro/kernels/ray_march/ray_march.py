@@ -37,6 +37,19 @@ def _composite_kernel(rgb_ref, sigma_ref, dts_ref, pix_ref, opac_ref):
     opac_ref[...] = jnp.sum(w, axis=-1, keepdims=True).astype(opac_ref.dtype)
 
 
+def vmem_plan(n_samples: int, dtype=jnp.float32, *, block_r: int = 256):
+    """Per-grid-step VMEM-resident blocks of :func:`composite_pallas` as
+    ``[(name, block_shape, dtype), ...]`` — mirrors the in/out specs.
+    Consumed by the static VMEM estimator (repro.analysis.vmem)."""
+    return [
+        ("rgb", (block_r, n_samples, 3), dtype),
+        ("sigma", (block_r, n_samples), dtype),
+        ("dts", (block_r, n_samples), dtype),
+        ("pixel", (block_r, 3), jnp.float32),
+        ("opacity", (block_r, 1), jnp.float32),
+    ]
+
+
 def composite_pallas(rgb: jnp.ndarray, sigma: jnp.ndarray, dts: jnp.ndarray,
                      *, block_r: int = 256, interpret: bool | None = None):
     """(R, S, 3), (R, S), (R, S) -> ((R, 3), (R,)). R % block_r == 0."""

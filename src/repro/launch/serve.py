@@ -157,7 +157,7 @@ def serve_lm(arch: str, reduced: bool = True, batch: int = 2,
 
     t0 = time.perf_counter()
     logits, cache = prefill_fn(params, batch_in, cache)
-    logits.block_until_ready()
+    logits.block_until_ready()  # repro: allow[host-sync] prefill timing boundary
     t_prefill = time.perf_counter() - t0
     out_tokens = []
     tok = jnp.argmax(logits, -1).astype(jnp.int32)[:, None]
@@ -167,7 +167,7 @@ def serve_lm(arch: str, reduced: bool = True, batch: int = 2,
         logits, cache = decode_fn(params, cache, tok,
                                   jnp.int32(prompt_len + i))
         tok = jnp.argmax(logits, -1).astype(jnp.int32)[:, None]
-    jax.block_until_ready(logits)
+    jax.block_until_ready(logits)  # repro: allow[host-sync] decode timing boundary
     t_decode = time.perf_counter() - t0
     if TRACER.enabled:
         now = time.perf_counter()

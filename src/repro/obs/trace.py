@@ -35,6 +35,7 @@ def annotate(name: str):
     return jax.named_scope(name)
 
 
+# repro: sync-boundary timing primitive — syncing IS its semantics
 def time_fn(fn, *args, warmup: int = 2, iters: int = 5) -> float:
     """Median wall time (s) of a jitted callable — THE definition of
     warmup-exclusion timing semantics (``warmup`` synced calls excluded,
@@ -94,6 +95,7 @@ class _Span:
         self._t0 = time.perf_counter()
         return self
 
+    # repro: sync-boundary synced-span close blocks on the bound value by contract
     def __exit__(self, *exc):
         if self._tracer.sync and self._bound is not None:
             import jax

@@ -124,6 +124,7 @@ class Ticket:
         self._res: Optional[np.ndarray] = None
         self._done = False
 
+    # repro: sync-boundary result() is THE designated submit/result sync point
     def result(self) -> np.ndarray:
         if not self._done:
             t_block0 = time.perf_counter()
@@ -160,7 +161,13 @@ class _Bucket:
 
 class RenderEngine:
     """Shape-bucketed, multi-scene, async render server (DESIGN.md §3;
-    observability contract in DESIGN.md §8)."""
+    observability contract in DESIGN.md §8).
+
+    The one-trace-per-bucket and async-submit contracts are lint-checked
+    (DESIGN.md §9): RJ202 verifies Camera treedef / BucketKey hash
+    stability against this module, ``submit`` is a ``# repro: hot-path``
+    scope where host syncs are errors, and ``Ticket.result`` is the
+    designated ``# repro: sync-boundary``."""
 
     def __init__(self, settings: Optional[RenderSettings] = None,
                  mesh=None, rules=None, max_inflight: int = 2,
@@ -274,6 +281,7 @@ class RenderEngine:
         return self._warmup_s
 
     # ------------------------------------------------------------- serve
+    # repro: hot-path submit must stay async — device syncs live in result()
     def submit(self, req: RenderRequest, _warmup: bool = False) -> Ticket:
         key = self._scene_bucket.get(req.scene)
         if key is None:
@@ -281,6 +289,7 @@ class RenderEngine:
         bucket = self._buckets[key]
         tp = self.settings.tile_pixels
         t_prep0 = time.perf_counter()
+        # repro: allow[host-sync] request ids arrive as host numpy, never traced
         ids = np.asarray(req.pixel_ids, np.int32).ravel()
         n = ids.shape[0]
         if n > tp:

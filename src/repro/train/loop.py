@@ -240,6 +240,13 @@ class TrainEngine:
 
     must be provided. ``state_shardings``/``batch_shardings`` pin the
     sharded LM layout; leave None for single-device field training.
+
+    Donation is a lint-checked contract (DESIGN.md §9): RJ203 lowers a
+    tiny chunk and asserts ``tf.aliasing_output`` appears iff
+    ``cfg.donate``, and RA106 flags any caller that reads a state it
+    passed to a chunk without rebinding (``state, out = chunk(state,
+    ...)`` is the blessed shape; ``run()``'s ``device_get`` is the one
+    allowed sync point per chunk).
     """
 
     def __init__(self, cfg: EngineConfig, step_fn: Callable, *,
@@ -380,6 +387,7 @@ class TrainEngine:
                                            next(prefetch))
                 else:
                     state, stacked = chunk(state, jnp.int32(s0))
+                # repro: allow[host-sync] the chunk's one designated sync point
                 stacked = jax.device_get(stacked)
                 dt = time.perf_counter() - t0
                 # the device_get above is the chunk's natural sync point,

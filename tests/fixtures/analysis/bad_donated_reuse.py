@@ -1,0 +1,16 @@
+"""RA106 true positive: reading a buffer after donating it."""
+import jax
+
+
+def trainer(step, state):
+    chunk = jax.jit(step, donate_argnums=(0,))
+    new_state, metrics = chunk(state, 0)     # donates `state`
+    loss = state["loss"]                     # line 8: use after donation
+    return new_state, metrics, loss
+
+
+def trainer_ok(step, state):
+    chunk = jax.jit(step, donate_argnums=(0,))
+    for i in range(4):
+        state, metrics = chunk(state, i)     # rebinds: fine
+    return state, metrics

@@ -1,0 +1,17 @@
+"""RA101 true positives: host syncs on traced values in jitted scope."""
+import jax
+import numpy as np
+
+
+@jax.jit
+def leaky(x):
+    y = np.asarray(x)            # line 8: conversion on traced value
+    z = float(x)                 # line 9: concretization
+    w = x.item()                 # line 10: scalar pull
+    return y, z, w
+
+
+# repro: hot-path
+def hot_submit(req):
+    ids = np.asarray(req)        # line 16: conversion on the hot path
+    return ids

@@ -1,0 +1,11 @@
+"""RA104 true positive: mutable default on a jitted entry point."""
+import jax
+
+
+@jax.jit
+def entry(x, opts=[]):           # line 6: mutable default, jitted -> error
+    return x
+
+
+def helper(x, acc={}):           # line 10: mutable default -> warning
+    return x

@@ -1,0 +1,6 @@
+"""RA105 true positive: print() outside obs/log."""
+
+
+def noisy(x):
+    print("value:", x)           # line 5
+    return x

@@ -1,0 +1,16 @@
+"""RA103 true positive: unhashable tree_flatten aux_data."""
+import jax
+
+
+@jax.tree_util.register_pytree_node_class
+class BadNode:
+    def __init__(self, a, meta):
+        self.a = a
+        self.meta = meta
+
+    def tree_flatten(self):
+        return (self.a,), [self.meta]    # line 12: list aux
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        return cls(children[0], aux[0])

@@ -1,0 +1,13 @@
+"""RA102 true positive: Python branch on a traced value."""
+import functools
+
+import jax
+
+
+@functools.partial(jax.jit, static_argnames=("flip",))
+def branchy(x, flip):
+    if x > 0:                    # line 9: traced branch
+        return x
+    if flip:                     # static_argname: fine
+        return -x
+    return x * 2

@@ -1,0 +1,43 @@
+"""True negatives: idioms every rule must accept unflagged."""
+import functools
+
+import jax
+import jax.numpy as jnp
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def kernel_entry(points, interpret=None):
+    if interpret is None:                  # `is` comparison: static
+        interpret = True
+    b = points.shape[0]                    # metadata access: static
+    if b > 4:                              # derived from .shape: static
+        points = points[:4]
+    return jnp.asarray(points) * 2.0       # jnp.asarray is NOT a sync
+
+
+def make_fn(with_aux):
+    def fn(params, x):
+        if with_aux:                       # closure var: static under jit
+            return params["w"] * x, x
+        return params["w"] * x
+    return jax.jit(fn)
+
+
+# repro: sync-boundary designated result point of this module
+def result(out):
+    jax.block_until_ready(out)
+    return out
+
+
+@jax.tree_util.register_pytree_node_class
+class GoodNode:
+    def __init__(self, a):
+        self.a = a
+
+    def tree_flatten(self):
+        return (self.a,), None             # aux=None: the Camera contract
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        del aux
+        return cls(children[0])

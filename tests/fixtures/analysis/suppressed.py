@@ -1,0 +1,7 @@
+"""Suppression fixture: one allowed violation, one naked one."""
+
+
+def reporter(rows):
+    # repro: allow[print] fixture stdout contract
+    print("header")
+    print("naked")               # line 7: unsuppressed
