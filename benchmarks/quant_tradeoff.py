@@ -1,0 +1,115 @@
+"""Quantization trade-off: serve throughput vs quality per table dtype.
+
+Trains one Table-I scene (nvr/hash — log2_T=19 at paper scale), then
+serves the same tile through both kernel routes with {f32, bf16, int8}
+tables and reports Mpix/s plus PSNR against that route's dense-f32
+render (DESIGN.md §10). int8 is the ``repro.quant`` post-training path:
+per-level calibrated scales ride along as sibling leaves and the Pallas
+kernels dequantize per gather, so the streamed table block shrinks 4x
+and ``pick_level_group`` earns 4x larger level groups — fewer grid
+steps over the level axis, which is exactly the bandwidth win the paper
+attributes to compressed field formats. The XLA route dequantizes the
+whole table per call (the parity reference), so int8 *costs* time
+there — the payload reports both, honestly.
+
+Acceptance (ISSUE 10): the ``quant`` payload must show >=1.5x int8 vs
+f32 Mpix/s at >=30 dB PSNR-vs-dense on at least one route of a Table-I
+config.
+
+Env knobs: ``BENCH_TRAIN_STEPS`` (default 150) shrinks training for
+smoke-level CI; ``BENCH_SMALL=1`` also shrinks the table to log2_T=14
+and the tile (the speedup claim needs paper scale — small mode is a
+correctness smoke, not the acceptance run)."""
+from __future__ import annotations
+
+import os
+
+import jax
+import jax.numpy as jnp
+
+from benchmarks.common import Csv, small_field, time_fn
+from repro.core import fields, pipeline, train
+from repro.data import scenes
+from repro.quant import QuantSpec, quantize_field
+
+APP, ENCODING = "nvr", "hash"
+
+
+def _variants(cfg, params):
+    """(label, cfg, params) per table dtype. bf16 casts the grid leaf
+    only (table bandwidth is the variable under test); int8 is the full
+    repro.quant path — quantized grid + scale sibling + cfg.quant."""
+    qspec = QuantSpec(table_qtype="int8")
+    return (
+        ("f32", cfg, params),
+        ("bf16", cfg, dict(params, grid=params["grid"].astype(jnp.bfloat16))),
+        ("int8", cfg.with_quant(qspec), quantize_field(params, qspec)),
+    )
+
+
+def run(csv: Csv):
+    small = os.environ.get("BENCH_SMALL") == "1"
+    steps = int(os.environ.get("BENCH_TRAIN_STEPS",
+                               "24" if small else "150"))
+    cfg = (small_field(APP, ENCODING) if small
+           else fields.make_field_config(APP, ENCODING))
+    params, hist = train.train_field(cfg, steps=steps, batch_size=2048,
+                                     gt_samples=32)
+    cam = scenes.default_camera(128, 128)
+    n_samples = 8 if small else 16
+    routes = ((False, 1024 if small else 4096),
+              (True, 256 if small else 512))
+    rows = []
+    for use_pallas, tile in routes:
+        route = "pallas" if use_pallas else "xla"
+        settings = pipeline.RenderSettings(tile_pixels=tile,
+                                           n_samples=n_samples,
+                                           use_pallas=use_pallas)
+        # stride the ids across the full frame — the first `tile` pixels
+        # are background rows, which would pin the PSNR at the clamp
+        ids = (jnp.arange(tile, dtype=jnp.int32)
+               * (128 * 128 // tile) + 128 // 2)
+        iters = 2 if use_pallas else 5
+        rgb_ref = None
+        for label, vcfg, vparams in _variants(cfg, params):
+            tile_fn = jax.jit(pipeline.make_tile_fn(vcfg, settings))
+            t = time_fn(tile_fn, vparams, cam, ids, warmup=1, iters=iters)
+            rgb = tile_fn(vparams, cam, ids).astype(jnp.float32)
+            if rgb_ref is None:
+                rgb_ref = rgb                 # dense f32, this route
+            mse = float(jnp.mean((rgb - rgb_ref) ** 2))
+            rows.append({
+                "route": route, "table_dtype": label,
+                "tile_pixels": tile, "n_samples": n_samples,
+                "seconds": t, "mpix_per_s": tile / t / 1e6,
+                "psnr_vs_dense_db": train.psnr(mse),
+            })
+            csv.add(f"quant/{route}/{label}", t,
+                    f"mpix={rows[-1]['mpix_per_s']:.3g}"
+                    f"_psnr={rows[-1]['psnr_vs_dense_db']:.1f}dB")
+
+    by = {(r["route"], r["table_dtype"]): r for r in rows}
+    summary = {}
+    for route in ("xla", "pallas"):
+        f32, int8 = by[(route, "f32")], by[(route, "int8")]
+        summary[route] = {
+            "int8_speedup_vs_f32": f32["seconds"] / int8["seconds"],
+            "int8_psnr_vs_dense_db": int8["psnr_vs_dense_db"],
+            "meets_speedup_1_5x": f32["seconds"] / int8["seconds"] >= 1.5,
+            "meets_psnr_30db": int8["psnr_vs_dense_db"] >= 30.0,
+        }
+    csv.add_json("quant", {
+        "app": APP, "encoding": ENCODING,
+        "log2_table_size": cfg.grid.log2_table_size,
+        "paper_scale": not small, "train_steps": steps,
+        "final_loss": hist[-1][1],
+        "rows": rows, "summary": summary,
+        "accepted": any(s["meets_speedup_1_5x"] and s["meets_psnr_30db"]
+                        for s in summary.values()),
+    })
+
+
+if __name__ == "__main__":
+    c = Csv()
+    run(c)
+    c.emit()

@@ -28,6 +28,7 @@ MODULES = [
     ("fig14", "benchmarks.fig14_fps"),
     ("table3", "benchmarks.table3_bandwidth"),
     ("serve_engine", "benchmarks.serve_engine"),
+    ("quant", "benchmarks.quant_tradeoff"),
     ("train", "benchmarks.train_field"),
     ("roofline", "benchmarks.roofline_report"),
 ]

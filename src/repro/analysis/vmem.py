@@ -1,8 +1,9 @@
 """Static VMEM estimator for the four Pallas kernels (rule RJ201).
 
 Computes the per-grid-step VMEM-resident bytes of every Table-I
-``(app, encoding)`` configuration at f32 and bf16 table dtype, for each
-kernel, directly from the kernels' own ``vmem_plan()`` functions — which
+``(app, encoding)`` configuration at f32, bf16, and int8 (quantized,
+repro.quant) table dtype, for each kernel, directly from the kernels'
+own ``vmem_plan()`` functions — which
 mirror the ``pallas_call`` BlockSpecs one-for-one and share their byte
 formula with the runtime group picker (``kernels.common``). If the
 kernels' tiling and this estimator ever disagree, the agreement test in
@@ -95,9 +96,14 @@ def estimate_config(app: str, encoding: str, dtype,
                                  vmem_budget_bytes=vmem_budget_bytes)
     out.append(_materialize("hashgrid", app, encoding, dtype, g, plan, budget))
 
-    plan = fused_mlp.vmem_plan(mlp_cfg, dtype)
-    out.append(_materialize("fused_mlp", app, encoding, dtype, None, plan,
-                            budget))
+    # quantized table dtypes (int8/fp8) apply to the grid tables only:
+    # MLP weights enter every kernel dense (maybe_dequant_mlp), so the
+    # standalone MLP kernel is estimated — truthfully — at f32
+    mlp_dtype = (jnp.float32 if kcommon.is_quantized_dtype(dtype)
+                 else dtype)
+    plan = fused_mlp.vmem_plan(mlp_cfg, mlp_dtype)
+    out.append(_materialize("fused_mlp", app, encoding, mlp_dtype, None,
+                            plan, budget))
 
     g, plan = fused_field.vmem_plan(cfg.grid, mlp_cfg, dtype,
                                     vmem_budget_bytes=vmem_budget_bytes)
@@ -112,11 +118,15 @@ def estimate_config(app: str, encoding: str, dtype,
 
 def table1_estimates(vmem_budget_bytes: Optional[int] = None
                      ) -> List[KernelEstimate]:
-    """All 12 Table-I configs x {f32, bf16} table dtype x 4 kernels."""
+    """All 12 Table-I configs x {f32, bf16, int8} table dtype x 4 kernels.
+
+    int8 is the quantized-table route (repro.quant): the table block
+    shrinks 4x, so ``pick_level_group`` earns larger groups and the
+    scale ride-along appears as an extra (g, 1, 1) f32 block."""
     out: List[KernelEstimate] = []
     for app in FIELD_APPS:
         for encoding in FIELD_ENCODINGS:
-            for dtype in (jnp.float32, jnp.bfloat16):
+            for dtype in (jnp.float32, jnp.bfloat16, jnp.int8):
                 out.extend(estimate_config(app, encoding, dtype,
                                            vmem_budget_bytes))
     return out

@@ -34,6 +34,7 @@ from pathlib import Path
 from typing import Any, Dict, Optional
 
 import jax
+import ml_dtypes  # noqa: F401  (registers bfloat16/float8 numpy dtype names)
 import numpy as np
 
 MANIFEST = "manifest.json"
@@ -132,6 +133,14 @@ def restore(directory: str | os.PathLike, target: Any,
         if verify and (zlib.crc32(arr.tobytes()) & 0xFFFFFFFF) \
                 != rec["crc32"]:
             raise IOError(f"CRC mismatch for {name} — corrupt checkpoint")
+        if str(arr.dtype) != rec["dtype"]:
+            # np.save writes extension dtypes (bfloat16, float8_e4m3fn —
+            # ml_dtypes) as raw void fields; the bytes survive but the
+            # dtype does not. The manifest is the dtype's source of
+            # truth: re-view the exact bytes under the recorded dtype.
+            arr = np.frombuffer(
+                arr.tobytes(), dtype=np.dtype(rec["dtype"])
+            ).reshape(rec["shape"])
         if list(arr.shape) != list(tgt.shape):
             raise ValueError(f"{name}: shape {arr.shape} != {tgt.shape}")
         arr = arr.astype(tgt.dtype)

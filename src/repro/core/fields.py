@@ -23,6 +23,8 @@ from repro.core import encoding as enc
 from repro.core.encoding import GridConfig
 from repro.core.mlp import MLPConfig, apply_mlp, init_mlp
 from repro.obs.trace import annotate
+from repro.quant import api as quant_api
+from repro.quant.qtypes import QuantSpec, dequantize
 
 
 @dataclasses.dataclass(frozen=True)
@@ -33,6 +35,10 @@ class FieldConfig:
     density_mlp: Optional[MLPConfig] = None   # NeRF only
     mlp: MLPConfig = None                     # main model MLP
     name: str = ""
+    # post-training quantization recipe (repro.quant, DESIGN.md §10);
+    # None = dense params. Frozen here so it is part of the scene's
+    # compiled identity — serve buckets key on the full config.
+    quant: Optional[QuantSpec] = None
 
     @property
     def in_dim(self) -> int:
@@ -57,6 +63,12 @@ class FieldConfig:
                     self.density_mlp, in_dim=grid.out_dim))
         return dataclasses.replace(
             cfg, mlp=dataclasses.replace(self.mlp, in_dim=grid.out_dim))
+
+    def with_quant(self, quant: Optional[QuantSpec]) -> "FieldConfig":
+        """The config twin of ``repro.quant.api.quantize_field``: pair the
+        quantized param tree with ``cfg.with_quant(spec)`` so the serve
+        engine can check params/config agreement at add_scene time."""
+        return dataclasses.replace(self, quant=quant)
 
 
 def _grid_for(encoding_kind: str, dim: int, growth_hash: float,
@@ -125,27 +137,38 @@ def apply_field(params: Dict, cfg: FieldConfig, points: jnp.ndarray,
         from repro.kernels.fused_field import ops as ff_ops
         return ff_ops.apply_field_fused(params, cfg, points, dirs)
 
+    # quantized scenes (repro.quant sibling-leaf convention): the XLA
+    # route dequantizes the whole table up front with the SAME
+    # qtypes.dequantize formula the kernels apply per gather — the
+    # quality oracle the Pallas quantized route is tested against
+    tables = params["grid"]
+    if "grid_scale" in params:
+        tables = dequantize(tables, params["grid_scale"])
+    dmlp = (quant_api.maybe_dequant_mlp(params["density_mlp"])
+            if "density_mlp" in params else None)
+    mlp_p = quant_api.maybe_dequant_mlp(params["mlp"])
+
     # phase scopes (DESIGN.md §8): XLA profiles / HLO metadata carry the
     # same encode|mlp names the host spans and fig5_live use
     barrier = not fused
     if cfg.app == "nerf":
         with annotate("encode"):
-            h = _encode(points, params["grid"], cfg.grid, barrier)
+            h = _encode(points, tables, cfg.grid, barrier)
         with annotate("mlp"):
-            dfeat = apply_mlp(params["density_mlp"], h, cfg.density_mlp)
+            dfeat = apply_mlp(dmlp, h, cfg.density_mlp)
             sigma = jnp.exp(dfeat[:, :1])      # instant-NGP exp activation
         with annotate("encode"):
             sh = enc.sh_encode(dirs)
         with annotate("mlp"):
             color_in = jnp.concatenate([sh, dfeat], axis=-1)
-            rgb = jax.nn.sigmoid(apply_mlp(params["mlp"], color_in,
+            rgb = jax.nn.sigmoid(apply_mlp(mlp_p, color_in,
                                            cfg.mlp))
         return jnp.concatenate([rgb, sigma], axis=-1)
 
     with annotate("encode"):
-        h = _encode(points, params["grid"], cfg.grid, barrier)
+        h = _encode(points, tables, cfg.grid, barrier)
     with annotate("mlp"):
-        out = apply_mlp(params["mlp"], h, cfg.mlp)
+        out = apply_mlp(mlp_p, h, cfg.mlp)
     if cfg.app == "gia":
         return jax.nn.sigmoid(out)
     if cfg.app == "nvr":

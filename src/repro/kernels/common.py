@@ -11,6 +11,16 @@ def on_tpu() -> bool:
     return jax.default_backend() == "tpu"
 
 
+def is_quantized_dtype(dtype) -> bool:
+    """True for table storage dtypes the kernels dequantize in-kernel
+    (``repro.quant`` codecs: int8 symmetric, fp8-e4m3). Quantized tables
+    ride with a small f32 scale operand — see each kernel's
+    ``vmem_plan`` — but the (g, T, F) table block itself stays in the
+    storage dtype, so its VMEM bytes shrink by ``4 / itemsize``."""
+    dt = jnp.dtype(dtype)
+    return dt == jnp.dtype(jnp.int8) or dt == jnp.dtype(jnp.float8_e4m3fn)
+
+
 def default_interpret() -> bool:
     """Pallas TPU kernels run in interpret mode off-TPU (this container is
     CPU-only; the TPU is the *target*, interpret validates the body)."""
@@ -77,6 +87,14 @@ def pick_level_group(cfg, dtype, vmem_budget_bytes: int | None = None) -> int:
     level exceeds any realistic budget — row-tiling within a level is the
     documented follow-up (DESIGN.md §2), so we degrade to one level per
     step rather than refuse to run.
+
+    The budget is gated on the TABLE block alone (dtype-aware through
+    ``itemsize``, so int8/fp8 tables earn 4x larger groups — the freed
+    VMEM is exactly the quantization win). The per-level scale ride-along
+    of a quantized table is (g, 1, 1) f32 — 4g bytes, noise next to the
+    MB-scale table block — and is charged by the static estimator
+    (RJ201) but deliberately not here: charging it would split a group
+    whose table block exactly meets the budget.
     """
     budget = (vmem_budget_bytes if vmem_budget_bytes is not None
               else DEFAULT_VMEM_BUDGET_BYTES)

@@ -28,15 +28,21 @@ from jax.experimental.pallas import tpu as pltpu
 
 from repro.core.encoding import GridConfig
 from repro.core.mlp import MLPConfig
-from repro.kernels.common import default_interpret, pick_level_group
+from repro.kernels.common import (default_interpret, is_quantized_dtype,
+                                  pick_level_group)
 from repro.kernels.fused_mlp.fused_mlp import pad_dim, padded_dims
 from repro.kernels.hashgrid.hashgrid import (encode_one_level, level_meta,
                                              table_block_spec)
 
 
-def _field_kernel(meta_ref, points_ref, tables_ref, w_in_ref, w_hid_ref,
-                  w_out_ref, out_ref, feat_ref, *, grid_cfg: GridConfig,
-                  mlp_cfg: MLPConfig, level_group: int, n_groups: int):
+def _field_kernel(meta_ref, points_ref, tables_ref, *rest,
+                  grid_cfg: GridConfig, mlp_cfg: MLPConfig,
+                  level_group: int, n_groups: int, quantized: bool):
+    if quantized:                            # (g, 1, 1) f32 scale ride-along
+        scales_ref, w_in_ref, w_hid_ref, w_out_ref, out_ref, feat_ref = rest
+    else:
+        scales_ref = None
+        w_in_ref, w_hid_ref, w_out_ref, out_ref, feat_ref = rest
     j = pl.program_id(1)                     # level group (innermost)
     # --- encoding engine: stream this group's table block, write features
     #     straight into the MLP input scratch (never to HBM) ---
@@ -48,8 +54,11 @@ def _field_kernel(meta_ref, points_ref, tables_ref, w_in_ref, w_hid_ref,
     tab = tables_ref[...]                    # (g, T, F) block in VMEM
     nf = grid_cfg.n_features
     for li in range(level_group):
+        # static in-group index: each unrolled level reads its own scale
+        scale = scales_ref[li, 0, 0] if quantized else None
         acc = encode_one_level(pts, tab[li], meta_ref,
-                               j * level_group + li, cfg=grid_cfg)
+                               j * level_group + li, cfg=grid_cfg,
+                               scale=scale)
         feat_ref[:, pl.ds((j * level_group + li) * nf, nf)] = acc
 
     # --- MLP engine: fires once per batch tile, on the last group ---
@@ -80,34 +89,54 @@ def vmem_plan(grid_cfg: GridConfig, mlp_cfg: MLPConfig, dtype, *,
     g = (level_group if level_group is not None
          else pick_level_group(grid_cfg, dtype, vmem_budget_bytes))
     din, hdim, dout, n_hid_stack = padded_dims(mlp_cfg, mxu_align)
-    return g, [
+    # quantized table dtypes apply to the TABLES only: MLP weights are
+    # dequantized on kernel entry (repro.quant.api.maybe_dequant_mlp), so
+    # their resident blocks are f32 — mirroring what the pallas_call runs.
+    quantized = is_quantized_dtype(dtype)
+    w_dtype = jnp.float32 if quantized else dtype
+    plan = [
         ("points", (block_b, grid_cfg.dim), jnp.float32),
         ("tables", table_block_spec(grid_cfg, g).block_shape, dtype),
-        ("w_in", (din, hdim), dtype),
-        ("w_hidden", (n_hid_stack, hdim, hdim), dtype),
-        ("w_out", (hdim, dout), dtype),
+        ("w_in", (din, hdim), w_dtype),
+        ("w_hidden", (n_hid_stack, hdim, hdim), w_dtype),
+        ("w_out", (hdim, dout), w_dtype),
         ("out", (block_b, dout), jnp.float32),
         ("feat_scratch", (block_b, din), jnp.float32),
     ]
+    if quantized:
+        plan.insert(2, ("table_scales", (g, 1, 1), jnp.float32))
+    return g, plan
 
 
 def fused_field_pallas(points: jnp.ndarray, tables: jnp.ndarray,
                        w_in: jnp.ndarray, w_hidden: jnp.ndarray,
                        w_out: jnp.ndarray, grid_cfg: GridConfig,
-                       mlp_cfg: MLPConfig, *, block_b: int = 512,
+                       mlp_cfg: MLPConfig, *,
+                       table_scales: jnp.ndarray | None = None,
+                       block_b: int = 512,
                        level_group: int | None = None,
                        vmem_budget_bytes: int | None = None,
                        interpret: bool | None = None, mxu_align: int = 128
                        ) -> jnp.ndarray:
     """points (B, d) -> (B, out_dim): encode + MLP, one kernel.
 
-    Tables may be fp32 or bf16 (the accelerator stores fp16 features);
-    features and accumulation are always f32."""
+    Tables are fp32/bf16 (dense) or int8/fp8-e4m3 (quantized with the
+    (L, 1, 1) f32 ``table_scales`` leaf — repro.quant); quantized blocks
+    stream through VMEM in the 1-byte storage dtype and dequantize
+    in-kernel after the gather, cutting this kernel's dominant traffic
+    term (the per-tile table re-stream) by 4x. MLP weights arrive dense
+    (quantized MLPs are dequantized on entry — they are KBs); features
+    and accumulation are always f32."""
     if interpret is None:
         interpret = default_interpret()
     b = points.shape[0]
     assert b % block_b == 0, (b, block_b)
     assert mlp_cfg.in_dim == grid_cfg.out_dim
+    quantized = is_quantized_dtype(tables.dtype)
+    if quantized != (table_scales is not None):
+        raise ValueError(
+            f"tables dtype {tables.dtype} "
+            + ("requires" if quantized else "forbids") + " table_scales")
 
     g = (level_group if level_group is not None
          else pick_level_group(grid_cfg, tables.dtype, vmem_budget_bytes))
@@ -123,28 +152,38 @@ def fused_field_pallas(points: jnp.ndarray, tables: jnp.ndarray,
 
     kernel = functools.partial(
         _field_kernel, grid_cfg=grid_cfg, mlp_cfg=mlp_cfg,
-        level_group=g, n_groups=n_groups)
+        level_group=g, n_groups=n_groups, quantized=quantized)
+
+    in_specs = [
+        pl.BlockSpec(memory_space=pltpu.SMEM),           # level meta
+        pl.BlockSpec((block_b, grid_cfg.dim), lambda i, j: (i, 0)),
+        pl.BlockSpec(table_block_spec(grid_cfg, g).block_shape,
+                     lambda i, j: (j, 0, 0)),            # grid_sram block
+    ]
+    operands = [level_meta(grid_cfg), points, tables]
+    if quantized:
+        in_specs.append(pl.BlockSpec((g, 1, 1), lambda i, j: (j, 0, 0)))
+        operands.append(table_scales.astype(jnp.float32))
+    in_specs += [
+        pl.BlockSpec((din, hdim), lambda i, j: (0, 0)),
+        pl.BlockSpec((n_hid_stack, hdim, hdim), lambda i, j: (0, 0, 0)),
+        pl.BlockSpec((hdim, dout), lambda i, j: (0, 0)),
+    ]
+    operands += [w_in_p, w_hid_p, w_out_p]
 
     out = pl.pallas_call(
         kernel,
         # level groups INNER: the feature scratch must fill before the MLP
         # fires, so groups sweep fastest within one batch tile. Table
         # blocks are therefore re-streamed per tile — the price of VMEM
-        # feasibility (DESIGN.md §2 quantifies the traffic).
+        # feasibility (DESIGN.md §2 quantifies the traffic; quantized
+        # tables shrink exactly this term).
         grid=(b // block_b, n_groups),
-        in_specs=[
-            pl.BlockSpec(memory_space=pltpu.SMEM),       # level meta
-            pl.BlockSpec((block_b, grid_cfg.dim), lambda i, j: (i, 0)),
-            pl.BlockSpec(table_block_spec(grid_cfg, g).block_shape,
-                         lambda i, j: (j, 0, 0)),        # grid_sram block
-            pl.BlockSpec((din, hdim), lambda i, j: (0, 0)),
-            pl.BlockSpec((n_hid_stack, hdim, hdim), lambda i, j: (0, 0, 0)),
-            pl.BlockSpec((hdim, dout), lambda i, j: (0, 0)),
-        ],
+        in_specs=in_specs,
         out_specs=pl.BlockSpec((block_b, dout), lambda i, j: (i, 0)),
         out_shape=jax.ShapeDtypeStruct((b, dout), jnp.float32),
         # the 'MLP input memory' the encoding engine writes into
         scratch_shapes=[pltpu.VMEM((block_b, din), jnp.float32)],
         interpret=interpret,
-    )(level_meta(grid_cfg), points, tables, w_in_p, w_hid_p, w_out_p)
+    )(*operands)
     return out[:, :mlp_cfg.out_dim]

@@ -23,6 +23,7 @@ from repro.kernels.common import default_interpret, pad_batch, pick_level_group
 from repro.kernels.fused_field.fused_field import fused_field_pallas
 from repro.kernels.fused_mlp import ops as mlp_ops
 from repro.obs.trace import annotate
+from repro.quant.api import maybe_dequant_mlp
 
 
 def _field_ref(points, tables, w_in, w_hidden, w_out, grid_cfg, mlp_cfg):
@@ -66,20 +67,36 @@ _field.defvjp(_field_fwd, _field_bwd)
                                     "level_group", "vmem_budget_bytes",
                                     "interpret"))
 def field(points, tables, mlp_params, grid_cfg, mlp_cfg, *,
-          block_b: int = 512, level_group: int | None = None,
+          table_scales=None, block_b: int = 512,
+          level_group: int | None = None,
           vmem_budget_bytes: int | None = None,
           interpret: bool | None = None):
+    """``table_scales`` (L, 1, 1) f32 routes quantized int8/fp8 tables
+    through the in-kernel dequant path; quantized MLP weight dicts are
+    dequantized on entry (repro.quant). Quantization is inference-only
+    (post-training, frozen scenes), so the quantized route bypasses the
+    training custom-VJP."""
     if interpret is None:
         interpret = default_interpret()
     if level_group is None:
         level_group = pick_level_group(grid_cfg, tables.dtype,
                                        vmem_budget_bytes)
     block_b = min(block_b, max(8, points.shape[0]))
+    mlp_params = maybe_dequant_mlp(mlp_params)
     w_hidden = mlp_params.get(
         "w_hidden", jnp.zeros((1, mlp_cfg.hidden_dim, mlp_cfg.hidden_dim),
                               mlp_params["w_in"].dtype))
     # one fused pallas_call covers both phases — annotate as the combined
     # encode_mlp phase (DESIGN.md §8: the NFP route can't split them)
+    if table_scales is not None:
+        pts, n = pad_batch(points, block_b)
+        with annotate("encode_mlp"):
+            out = fused_field_pallas(
+                pts, tables, mlp_params["w_in"], w_hidden,
+                mlp_params["w_out"], grid_cfg, mlp_cfg,
+                table_scales=table_scales, block_b=block_b,
+                level_group=level_group, interpret=interpret)
+        return out[:n]
     with annotate("encode_mlp"):
         return _field(points, tables, mlp_params["w_in"], w_hidden,
                       mlp_params["w_out"], grid_cfg, mlp_cfg, block_b,
@@ -88,19 +105,25 @@ def field(points, tables, mlp_params, grid_cfg, mlp_cfg, *,
 
 def apply_field_fused(params, cfg: FieldConfig, points, dirs=None,
                       interpret: bool | None = None):
-    """Drop-in for core.fields.apply_field(..., use_pallas=True)."""
+    """Drop-in for core.fields.apply_field(..., use_pallas=True).
+
+    Quantized scenes (repro.quant sibling-leaf convention) route their
+    ``grid_scale`` leaf into the kernels; MLP dicts pass through — the
+    ``field``/``mlp`` wrappers dequantize quantized weights on entry."""
+    tscale = params.get("grid_scale")
     if cfg.app == "nerf":
         dfeat = field(points, params["grid"], params["density_mlp"],
-                      cfg.grid, cfg.density_mlp, interpret=interpret)
+                      cfg.grid, cfg.density_mlp, table_scales=tscale,
+                      interpret=interpret)
         sigma = jnp.exp(dfeat[:, :1])
         color_in = jnp.concatenate([enc.sh_encode(dirs), dfeat], axis=-1)
         rgb = jax.nn.sigmoid(
-            mlp_ops.mlp(params["mlp"], color_in, cfg.mlp,
+            mlp_ops.mlp(maybe_dequant_mlp(params["mlp"]), color_in, cfg.mlp,
                         interpret=interpret))
         return jnp.concatenate([rgb, sigma], axis=-1)
 
     out = field(points, params["grid"], params["mlp"], cfg.grid, cfg.mlp,
-                interpret=interpret)
+                table_scales=tscale, interpret=interpret)
     if cfg.app == "gia":
         return jax.nn.sigmoid(out)
     if cfg.app == "nvr":

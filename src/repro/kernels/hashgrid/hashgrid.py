@@ -32,7 +32,9 @@ from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
 from repro.core.encoding import GridConfig, HASH_PRIMES
-from repro.kernels.common import default_interpret, pick_level_group
+from repro.kernels.common import (default_interpret, is_quantized_dtype,
+                                  pick_level_group)
+from repro.quant import qtypes
 
 
 def level_meta(cfg: GridConfig) -> jnp.ndarray:
@@ -54,6 +56,14 @@ def table_block_spec(cfg: GridConfig, level_group: int) -> pl.BlockSpec:
                         lambda j, i: (j, 0, 0))
 
 
+def table_scale_block_spec(level_group: int) -> pl.BlockSpec:
+    """Per-level dequant scales riding along with a quantized table block:
+    the (g, 1, 1) f32 slice of the (L, 1, 1) scale leaf for the same
+    level group the table BlockSpec selects. 4g bytes — charged by the
+    static VMEM estimator, negligible next to the table block."""
+    return pl.BlockSpec((level_group, 1, 1), lambda j, i: (j, 0, 0))
+
+
 def vmem_plan(cfg: GridConfig, dtype, *, block_b: int = 1024,
               level_group: int | None = None,
               vmem_budget_bytes: int | None = None):
@@ -61,22 +71,36 @@ def vmem_plan(cfg: GridConfig, dtype, *, block_b: int = 1024,
 
     Returns ``(level_group, [(name, block_shape, dtype), ...])`` mirroring
     the ``pallas_call``'s in/out specs (the SMEM level-meta table is
-    excluded — it is not VMEM). Consumed by the static VMEM estimator."""
+    excluded — it is not VMEM). Quantized table dtypes (int8 / fp8) add
+    the (g, 1, 1) f32 scale ride-along the kernel dequantizes with.
+    Consumed by the static VMEM estimator."""
     g = (level_group if level_group is not None
          else pick_level_group(cfg, dtype, vmem_budget_bytes))
-    return g, [
+    plan = [
         ("points", (block_b, cfg.dim), jnp.float32),
         ("tables", table_block_spec(cfg, g).block_shape, dtype),
         ("out", (block_b, g * cfg.n_features), jnp.float32),
     ]
+    if is_quantized_dtype(dtype):
+        plan.insert(2, ("table_scales",
+                        table_scale_block_spec(g).block_shape, jnp.float32))
+    return g, plan
 
 
-def encode_one_level(pts, tab, meta_ref, level, *, cfg: GridConfig
-                     ) -> jnp.ndarray:
+def encode_one_level(pts, tab, meta_ref, level, *, cfg: GridConfig,
+                     scale=None) -> jnp.ndarray:
     """In-kernel encode of ONE level: gather 2^d corners + d-linear lerp.
 
     pts (blk, d) f32 in [0,1]; tab (T, F) VMEM table slice; meta_ref SMEM
     (L, 2); level dynamic scalar -> (blk, F) f32.
+
+    ``scale`` (scalar f32, or None for dense tables) is the per-level
+    dequant scale of a quantized (int8/fp8) table slice: the corner
+    GATHER stays in the storage dtype — that is the whole VMEM/traffic
+    win — and each gathered (blk, F) feature vector is dequantized with
+    the shared ``repro.quant.qtypes.dequantize`` formula before the
+    lerp. Dense tables take the exact pre-existing ``astype(f32)`` path,
+    so dense outputs are bit-identical to before quantization existed.
 
     Every caller loops levels and stores each level's (blk, F) slice
     separately, so the per-level compute graph is *structurally identical*
@@ -127,54 +151,84 @@ def encode_one_level(pts, tab, meta_ref, level, *, cfg: GridConfig
             idx = hidx if hidx is not None else didx
         idx = (idx & mask).astype(jnp.int32)
         fc = jnp.take(tab, idx, axis=0)                  # VMEM gather
+        if scale is not None:                            # in-kernel dequant
+            feat = qtypes.dequantize(fc, scale)
+        else:
+            feat = fc.astype(jnp.float32)
         w = jnp.ones((blk,), jnp.float32)
         for i in range(cfg.dim):
             w = w * (frac[:, i] if bits[i] else 1.0 - frac[:, i])
-        acc = acc + w[:, None] * fc.astype(jnp.float32)
+        acc = acc + w[:, None] * feat
     return acc
 
 
-def _encode_kernel(meta_ref, points_ref, tables_ref, out_ref, *,
-                   cfg: GridConfig, level_group: int):
+def _encode_kernel(meta_ref, points_ref, tables_ref, *rest,
+                   cfg: GridConfig, level_group: int, quantized: bool):
+    if quantized:                    # (g, 1, 1) f32 scale ride-along
+        scales_ref, out_ref = rest
+    else:
+        scales_ref, (out_ref,) = None, rest
     j = pl.program_id(0)                                 # level group
     pts = points_ref[...].astype(jnp.float32)            # (blk, d)
     tab = tables_ref[...]                                # (g, T, F) in VMEM
     nf = cfg.n_features
     for li in range(level_group):                        # the level engines
+        # static in-group index: each unrolled level reads its own scale
+        scale = scales_ref[li, 0, 0] if quantized else None
         acc = encode_one_level(pts, tab[li], meta_ref,
-                               j * level_group + li, cfg=cfg)
+                               j * level_group + li, cfg=cfg, scale=scale)
         out_ref[:, li * nf:(li + 1) * nf] = acc.astype(out_ref.dtype)
 
 
 def hashgrid_encode_pallas(points: jnp.ndarray, tables: jnp.ndarray,
-                           cfg: GridConfig, *, block_b: int = 1024,
+                           cfg: GridConfig, *,
+                           table_scales: jnp.ndarray | None = None,
+                           block_b: int = 1024,
                            level_group: int | None = None,
                            vmem_budget_bytes: int | None = None,
                            interpret: bool | None = None) -> jnp.ndarray:
-    """points (B, d) in [0,1], tables (L, T, F) fp32/bf16 -> (B, L*F) f32.
+    """points (B, d) in [0,1], tables (L, T, F) -> (B, L*F) f32.
+
+    Tables are fp32/bf16 (dense) or int8/fp8-e4m3 (quantized,
+    ``repro.quant``); quantized tables require ``table_scales`` —
+    the (L, 1, 1) f32 per-level scale leaf — and are dequantized
+    in-kernel after the gather, so the VMEM-resident table block stays
+    in the 1-byte storage dtype and ``pick_level_group`` earns 4x
+    larger level groups from the same budget.
 
     B must be a multiple of block_b (ops.py pads)."""
     if interpret is None:
         interpret = default_interpret()
     b = points.shape[0]
     assert b % block_b == 0, (b, block_b)
+    quantized = is_quantized_dtype(tables.dtype)
+    if quantized != (table_scales is not None):
+        raise ValueError(
+            f"tables dtype {tables.dtype} "
+            + ("requires" if quantized else "forbids") + " table_scales")
     g = (level_group if level_group is not None
          else pick_level_group(cfg, tables.dtype, vmem_budget_bytes))
     assert cfg.n_levels % g == 0, (cfg.n_levels, g)
     n_groups = cfg.n_levels // g
-    kernel = functools.partial(_encode_kernel, cfg=cfg, level_group=g)
+    kernel = functools.partial(_encode_kernel, cfg=cfg, level_group=g,
+                               quantized=quantized)
+    in_specs = [
+        pl.BlockSpec(memory_space=pltpu.SMEM),           # level meta
+        pl.BlockSpec((block_b, cfg.dim), lambda j, i: (i, 0)),
+        table_block_spec(cfg, g),
+    ]
+    operands = [level_meta(cfg), points, tables]
+    if quantized:
+        in_specs.append(table_scale_block_spec(g))
+        operands.append(table_scales.astype(jnp.float32))
     return pl.pallas_call(
         kernel,
         # level groups OUTER: each table block is fetched once and reused
         # across all batch tiles (batch is the fast axis).
         grid=(n_groups, b // block_b),
-        in_specs=[
-            pl.BlockSpec(memory_space=pltpu.SMEM),       # level meta
-            pl.BlockSpec((block_b, cfg.dim), lambda j, i: (i, 0)),
-            table_block_spec(cfg, g),
-        ],
+        in_specs=in_specs,
         out_specs=pl.BlockSpec((block_b, g * cfg.n_features),
                                lambda j, i: (i, j)),
         out_shape=jax.ShapeDtypeStruct((b, cfg.out_dim), jnp.float32),
         interpret=interpret,
-    )(level_meta(cfg), points, tables)
+    )(*operands)

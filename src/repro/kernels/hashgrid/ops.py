@@ -46,13 +46,26 @@ _encode.defvjp(_encode_fwd, _encode_bwd)
                                              "vmem_budget_bytes",
                                              "interpret"))
 def encode(points: jnp.ndarray, tables: jnp.ndarray, cfg: GridConfig,
-           *, block_b: int = 1024, level_group: int | None = None,
+           *, table_scales: jnp.ndarray | None = None,
+           block_b: int = 1024, level_group: int | None = None,
            vmem_budget_bytes: int | None = None,
            interpret: bool | None = None) -> jnp.ndarray:
+    """``table_scales`` (L, 1, 1) f32 routes quantized int8/fp8 tables
+    through the in-kernel dequant path (repro.quant). That path is
+    inference-only — post-training quantization serves frozen scenes, so
+    no custom VJP is defined for it; training always runs dense."""
     if interpret is None:
         interpret = default_interpret()
     if level_group is None:
         level_group = pick_level_group(cfg, tables.dtype, vmem_budget_bytes)
     block_b = min(block_b, max(8, points.shape[0]))
+    if table_scales is not None:
+        padded, n = pad_batch(points, block_b)
+        with annotate("encode"):
+            out = hashgrid_encode_pallas(
+                padded, tables, cfg, table_scales=table_scales,
+                block_b=block_b, level_group=level_group,
+                interpret=interpret)
+        return out[:n]
     with annotate("encode"):
         return _encode(points, tables, cfg, block_b, level_group, interpret)

@@ -1,6 +1,38 @@
-"""Pure-jnp oracle for the hashgrid kernel: the core library itself."""
+"""Pure-jnp oracles for the hashgrid kernel.
+
+Two references, two jobs:
+
+  * :func:`encode_ref` — the core library's ``grid_encode``: the QUALITY
+    oracle (independent math: vectorized corner weights via ``jnp.prod``).
+    Kernel outputs must match it to ~1e-5 (f32); for quantized tables it
+    runs on the dequantized-f32 twin.
+  * :func:`encode_ref_quantized` — the XLA DEQUANT path: a jitted pure-XLA
+    (no ``pallas_call``) mirror of the kernel's per-level loop using the
+    same ``encode_one_level`` body and the shared ``qtypes.dequantize``
+    formula. Compiled by the same XLA CPU pipeline as the interpret-mode
+    kernel, it is BIT-IDENTICAL to the Pallas int8 route — the parity bar
+    tests/test_quant.py enforces. (Eager execution or ``jnp.prod``-style
+    weights each drift ~1e-9 via FMA/fusion differences; see the test's
+    docstring.)
+"""
+import functools
+
+import jax
+import jax.numpy as jnp
+
 from repro.core.encoding import grid_encode
 
 
 def encode_ref(points, tables, cfg):
     return grid_encode(points, tables, cfg)
+
+
+@functools.partial(jax.jit, static_argnames=("cfg",))
+def encode_ref_quantized(points, q_tables, table_scales, cfg):
+    """XLA dequant reference for quantized (int8/fp8) tables -> (B, L*F)."""
+    from repro.kernels.hashgrid.hashgrid import encode_one_level, level_meta
+    meta = level_meta(cfg)
+    outs = [encode_one_level(points, q_tables[l], meta, l, cfg=cfg,
+                             scale=table_scales[l, 0, 0])
+            for l in range(cfg.n_levels)]
+    return jnp.concatenate(outs, axis=-1)

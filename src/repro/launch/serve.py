@@ -32,6 +32,7 @@ def serve_render(app: str = "gia", encoding: str = "hash",
                  n_scenes: int = 2, n_cameras: int = 3, shard: bool = False,
                  occupancy: bool = False,
                  sample_budget: int | None = None,
+                 quant: str | None = None,
                  metrics_out: str | None = None):
     """Train ``n_scenes`` small fields, then serve a mixed request stream
     (scenes x viewpoints) through the RenderEngine — one compiled
@@ -39,11 +40,17 @@ def serve_render(app: str = "gia", encoding: str = "hash",
 
     ``occupancy`` serves the ray apps occupancy-culled (DESIGN.md §7):
     training maintains the grid at chunk ends, the engine compacts to
-    ``sample_budget`` samples per tile (default: the dense count)."""
+    ``sample_budget`` samples per tile (default: the dense count).
+
+    ``quant`` ('int8' | 'fp8_e4m3') serves the scenes post-training-
+    quantized (DESIGN.md §10): tables are calibrated and encoded after
+    training, the engine buckets them separately (cfg.quant + leaf
+    dtypes), and both kernel routes dequantize on the fly."""
     import dataclasses
     from repro.core import pipeline
     from repro.core.train import train_field
     from repro.data import scenes
+    from repro.quant import QuantSpec, quantize_field
     from repro.serve import RenderEngine, RenderRequest
 
     if n_scenes < 1 or n_cameras < 1:
@@ -57,6 +64,9 @@ def serve_render(app: str = "gia", encoding: str = "hash",
     # dependent MLP dims — including nerf's density MLP)
     cfg = base.with_grid(
         dataclasses.replace(base.grid, log2_table_size=14))
+    qspec = QuantSpec(table_qtype=quant) if quant else None
+    if qspec is not None:
+        cfg = cfg.with_quant(qspec)
 
     settings = pipeline.RenderSettings(tile_pixels=tile_pixels,
                                        use_pallas=use_pallas,
@@ -73,6 +83,9 @@ def serve_render(app: str = "gia", encoding: str = "hash",
         _LOG.info("scene_trained", scene=s,
                   loss_first=round(float(hist[0][1]), 4),
                   loss_last=round(float(hist[-1][1]), 4))
+        if qspec is not None:
+            params = quantize_field(params, qspec)
+            _LOG.info("scene_quantized", scene=s, quant=qspec.tag)
         engine.add_scene(f"scene{s}", cfg, params)
 
     # viewpoints orbiting the scene — all served by the same executable
@@ -206,6 +219,11 @@ def main(argv=None):
     ap.add_argument("--sample-budget", type=int, default=None,
                     help="static field-eval budget per tile (default: "
                          "tile_pixels * n_samples, the dense count)")
+    ap.add_argument("--quant", default=None,
+                    choices=["int8", "fp8_e4m3"],
+                    help="post-training table quantization (repro.quant):"
+                         " serve scenes with int8/fp8 tables, dequantized"
+                         " in-kernel on the Pallas route")
     ap.add_argument("--trace-out", default=None,
                     help="write a Chrome-trace JSON of the run here "
                          "(enables the span tracer)")
@@ -225,6 +243,7 @@ def main(argv=None):
                      n_cameras=args.cameras, shard=args.shard,
                      occupancy=args.occupancy,
                      sample_budget=args.sample_budget,
+                     quant=args.quant,
                      metrics_out=args.metrics_out)
     else:
         serve_lm(args.arch, args.reduced)

@@ -1,0 +1,16 @@
+"""repro.quant — int8/fp8 post-training quantization of neural fields.
+
+See DESIGN.md §10. Layering: ``qtypes`` (codecs, zero repro deps) <-
+``calibrate`` (params -> scales) <- ``api`` (whole-field transform).
+The kernels import only ``qtypes``; ``core/fields`` imports ``qtypes``
+and ``api`` — never the reverse, so quant sits below core in the
+dependency order."""
+from repro.quant.api import (dequantize_field, is_quantized_field,
+                             maybe_dequant_mlp, quantize_field)
+from repro.quant.qtypes import QuantSpec, dequantize, quantize
+
+__all__ = [
+    "QuantSpec", "quantize", "dequantize",
+    "quantize_field", "dequantize_field", "is_quantized_field",
+    "maybe_dequant_mlp",
+]

@@ -1,0 +1,65 @@
+"""Post-training calibration: trained params -> scale (and zero) leaves.
+
+Calibration is the only data-dependent step of quantization and it runs
+ONCE, on the host, after training — the scales it emits are then frozen
+into the param pytree as sibling leaves (``qtypes`` module docstring)
+and travel with the scene through checkpoint and serve.
+
+Granularity follows the traffic structure the kernels see:
+
+  * hash tables ``(L, T, F)`` — one scale PER LEVEL, shape ``(L, 1, 1)``.
+    Levels differ in magnitude by orders (coarse levels saturate toward
+    the scene bound, fine levels stay near init); a per-tensor scale
+    would crush the fine levels into one or two codes. Per-level is also
+    exactly what the kernels can afford: the scale ride-along operand is
+    ``(g, 1, 1)`` per grid step and the in-group loop reads each level's
+    scale with a static index.
+  * MLP weight stacks — per-tensor ``(1, 1)`` for ``w_in`` / ``w_out``,
+    per-layer ``(n, 1, 1)`` for the stacked ``w_hidden``.
+
+``percentile < 100`` clips outlier table ROWS (a row = one table entry's
+F features) into saturation instead of letting one hot row inflate the
+scale for its whole level.
+"""
+from __future__ import annotations
+
+from typing import Dict
+
+import jax.numpy as jnp
+
+from repro.quant import qtypes
+
+# MLP weight leaves, in the layout ``core/mlp.init_mlp`` emits; w_hidden
+# is a stacked (n_hidden-1, h, h) scan operand -> per-layer scales.
+MLP_WEIGHT_KEYS = ("w_in", "w_hidden", "w_out")
+
+
+def table_scales(tables: jnp.ndarray, spec: qtypes.QuantSpec) -> jnp.ndarray:
+    """Per-level scales ``(L, 1, 1)`` f32 for an ``(L, T, F)`` table stack."""
+    if tables.ndim != 3:
+        raise ValueError(f"expected (L, T, F) tables, got {tables.shape}")
+    return qtypes.absmax_scale(tables, spec.table_qtype, axis=(1, 2),
+                               percentile=spec.percentile)
+
+
+def mlp_scales(mlp_params: Dict[str, jnp.ndarray],
+               spec: qtypes.QuantSpec) -> Dict[str, jnp.ndarray]:
+    """Scale (and, for affine, zero) leaves for one MLP param dict.
+
+    Returns only the NEW sibling leaves, keyed ``w_*_scale`` /
+    ``w_*_zero`` — the caller merges them next to the originals."""
+    out: Dict[str, jnp.ndarray] = {}
+    for key in MLP_WEIGHT_KEYS:
+        if key not in mlp_params:
+            continue
+        w = mlp_params[key]
+        # stacked (n, h, h) scan leaves calibrate per layer
+        axis = (-2, -1) if w.ndim == 3 else None
+        if spec.mlp_qtype == "int8_affine":
+            scale, zero = qtypes.affine_range_scale(w, axis=axis)
+            out[key + "_scale"] = scale
+            out[key + "_zero"] = zero
+        else:
+            out[key + "_scale"] = qtypes.absmax_scale(
+                w, spec.mlp_qtype, axis=axis, percentile=spec.percentile)
+    return out

@@ -1,0 +1,167 @@
+"""Quantized number formats for neural-field parameters (DESIGN.md §10).
+
+The paper's bottleneck is bytes: encode + MLP spend most of their time
+moving table rows and weights (Fig. 5), and the NGPC's wins come from
+shrinking the per-sample traffic those kernels pay. Related accelerators
+(ASDR's CIM tables, Uni-Render's reduced-precision weights) bake the same
+move into silicon. This module is the software analogue: storage codecs
+that shrink the *resident* bytes while keeping all arithmetic in f32.
+
+Three codecs, one dequant formula:
+
+  * ``int8``        — symmetric:  q = clip(round(x / s), -127, 127)
+  * ``int8_affine`` — asymmetric: q = clip(round(x / s) + z, -128, 127)
+  * ``fp8_e4m3``    — scaled cast to ``float8_e4m3fn`` (saturating)
+
+Dequant is ALWAYS ``astype(f32) * scale`` (affine subtracts the zero
+point first). :func:`dequantize` is the single definition — the Pallas
+kernels call it per gathered feature vector (the gather itself stays
+int8/fp8, so the VMEM-resident table block shrinks 4x/4x), the XLA
+reference path calls it on the whole table, and the gradient compressor
+(``train/compression.py``) calls it on the wire tensor. One formula, no
+drift.
+
+Scale-leaf pytree convention (shared with ``quant/api.py`` and the
+serve engine): a quantized leaf ``k`` stores its f32 scales in a SIBLING
+leaf ``k + "_scale"`` (and ``k + "_zero"`` for the affine codec), shaped
+to broadcast against ``k`` — ``(L, 1, 1)`` per-level for the ``(L, T,
+F)`` grid tables, ``(1, 1)`` per-tensor / ``(n, 1, 1)`` per-layer for
+MLP weight stacks. Sibling leaves ride every existing pytree transform
+(stacking, sharding, checkpointing) with zero special cases.
+
+``QuantSpec`` is a frozen dataclass so it can live inside the frozen
+``FieldConfig`` — serve buckets then key on it (DESIGN.md §3): a
+quantized scene can never silently stack with a dense one.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Tuple
+
+import jax.numpy as jnp
+
+# storage formats the field codecs understand
+QTYPES = ("int8", "int8_affine", "fp8_e4m3")
+# formats the Pallas kernels dequantize in-kernel (affine needs the extra
+# zero-point operand and is dequantized on entry instead — DESIGN.md §10)
+KERNEL_QTYPES = ("int8", "fp8_e4m3")
+
+INT8_QMAX = 127.0
+FP8_E4M3_MAX = 448.0          # largest finite float8_e4m3fn
+_EPS = 1e-12                  # scale floor: all-zero tensors quantize to 0
+
+
+@dataclasses.dataclass(frozen=True)
+class QuantSpec:
+    """Frozen quantization recipe — part of the field's compiled identity.
+
+    ``table_qtype`` must be a kernel-dequantizable format
+    (:data:`KERNEL_QTYPES`); ``mlp_qtype`` may be any codec (MLP weights
+    are dequantized on kernel entry — they are KBs, the tables are MBs).
+    ``percentile`` is the abs-max percentile over table rows used at
+    calibration (100 = exact abs-max; lower clips outlier rows)."""
+    table_qtype: Optional[str] = "int8"
+    mlp_qtype: Optional[str] = None
+    percentile: float = 100.0
+
+    def __post_init__(self):
+        if self.table_qtype is not None \
+                and self.table_qtype not in KERNEL_QTYPES:
+            raise ValueError(
+                f"table_qtype {self.table_qtype!r} not kernel-dequantizable"
+                f" (one of {KERNEL_QTYPES})")
+        if self.mlp_qtype is not None and self.mlp_qtype not in QTYPES:
+            raise ValueError(f"mlp_qtype {self.mlp_qtype!r} not in {QTYPES}")
+        if not 0.0 < self.percentile <= 100.0:
+            raise ValueError(f"percentile {self.percentile} not in (0, 100]")
+
+    @property
+    def tag(self) -> str:
+        """Short stable label for bucket keys / bench rows."""
+        parts = []
+        if self.table_qtype:
+            parts.append(f"t:{self.table_qtype}")
+        if self.mlp_qtype:
+            parts.append(f"m:{self.mlp_qtype}")
+        return "+".join(parts) or "dense"
+
+
+def storage_dtype(qtype: str):
+    if qtype in ("int8", "int8_affine"):
+        return jnp.int8
+    if qtype == "fp8_e4m3":
+        return jnp.float8_e4m3fn
+    raise ValueError(f"unknown qtype {qtype!r}")
+
+
+def qmax(qtype: str) -> float:
+    """Largest magnitude the format represents (scale = absmax / qmax)."""
+    return FP8_E4M3_MAX if qtype == "fp8_e4m3" else INT8_QMAX
+
+
+def is_quantized(x) -> bool:
+    """True for leaves stored in a codec dtype (int8 / fp8)."""
+    dt = jnp.dtype(x.dtype if hasattr(x, "dtype") else x)
+    return dt == jnp.int8 or dt == jnp.dtype(jnp.float8_e4m3fn)
+
+
+# ------------------------------------------------------------------ scales
+def absmax_scale(x: jnp.ndarray, qtype: str, *, axis=None,
+                 percentile: float = 100.0) -> jnp.ndarray:
+    """Per-group scale from the abs-max (percentile) of ``x``.
+
+    ``axis`` is the reduction group (None = per-tensor); keepdims, so the
+    scale broadcasts against ``x`` — the sibling-leaf shape convention.
+    ``percentile < 100`` takes the percentile of per-ROW abs-maxes (rows
+    = the last axis, a table row's F features) instead of the global
+    max, clipping outlier rows into saturation."""
+    a = jnp.abs(x.astype(jnp.float32))
+    if percentile >= 100.0:
+        m = jnp.max(a, axis=axis, keepdims=True)
+    else:
+        rows = jnp.max(a, axis=-1, keepdims=True)      # per-row abs-max
+        m = jnp.percentile(rows, percentile, axis=axis, keepdims=True)
+    return jnp.maximum(m, _EPS) / qmax(qtype)
+
+
+# ------------------------------------------------------------------ codecs
+def quantize(x: jnp.ndarray, scale: jnp.ndarray, qtype: str) -> jnp.ndarray:
+    """Encode ``x`` into the storage dtype under broadcastable ``scale``."""
+    y = x.astype(jnp.float32) / scale
+    if qtype in ("int8", "int8_affine"):
+        return jnp.clip(jnp.round(y), -INT8_QMAX, INT8_QMAX
+                        ).astype(jnp.int8)
+    if qtype == "fp8_e4m3":
+        return jnp.clip(y, -FP8_E4M3_MAX, FP8_E4M3_MAX
+                        ).astype(jnp.float8_e4m3fn)
+    raise ValueError(f"unknown qtype {qtype!r}")
+
+
+def dequantize(q: jnp.ndarray, scale) -> jnp.ndarray:
+    """THE dequant formula: ``astype(f32) * scale`` — shared verbatim by
+    the in-kernel per-gather dequant (``kernels/hashgrid``,
+    ``kernels/fused_field``), the XLA whole-table path
+    (``core/fields.py``), and grad compression. Keep it one multiply:
+    the kernel bit-identity tests pin this exact op sequence."""
+    return q.astype(jnp.float32) * scale
+
+
+def affine_range_scale(x: jnp.ndarray, *, axis=None
+                       ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """(scale, zero_point f32) mapping [min, max] onto [-128, 127]."""
+    xf = x.astype(jnp.float32)
+    lo = jnp.min(xf, axis=axis, keepdims=True)
+    hi = jnp.max(xf, axis=axis, keepdims=True)
+    scale = jnp.maximum(hi - lo, _EPS) / 255.0
+    zero = jnp.round(-128.0 - lo / scale)
+    return scale, zero
+
+
+def quantize_affine(x: jnp.ndarray, scale: jnp.ndarray,
+                    zero: jnp.ndarray) -> jnp.ndarray:
+    y = jnp.round(x.astype(jnp.float32) / scale) + zero
+    return jnp.clip(y, -128, 127).astype(jnp.int8)
+
+
+def dequantize_affine(q: jnp.ndarray, scale, zero) -> jnp.ndarray:
+    return (q.astype(jnp.float32) - zero) * scale

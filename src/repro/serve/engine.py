@@ -58,6 +58,7 @@ from repro.core.fields import FieldConfig
 from repro.core.pipeline import RenderSettings
 from repro.obs import metrics as obs_metrics
 from repro.obs.trace import TRACER
+from repro.quant.api import is_quantized_field
 from repro.serve import sharding
 
 
@@ -211,6 +212,21 @@ class RenderEngine:
         # ordered per-leaf dtypes (tree order is deterministic given cfg):
         # a bf16-table+f32-MLP scene must not collide with f32-table+bf16-MLP
         dtype = ",".join(str(l.dtype) for l in jax.tree.leaves(params))
+        # quantized scenes (repro.quant): params and config must agree —
+        # a quantized tree under a dense cfg (or vice versa) would compile
+        # but silently mis-bucket or crash in the kernels at trace time
+        q_params = is_quantized_field(params)
+        if q_params and cfg.quant is None:
+            raise ValueError(
+                f"scene {name!r} has quantized params but cfg.quant is "
+                "None — pair quantize_field(params, spec) with "
+                "cfg.with_quant(spec)")
+        if cfg.quant is not None and cfg.quant.table_qtype is not None \
+                and "grid_scale" not in params:
+            raise ValueError(
+                f"scene {name!r}: cfg.quant declares table_qtype="
+                f"{cfg.quant.table_qtype!r} but params have no "
+                "'grid_scale' leaf — run repro.quant.quantize_field")
         if (self.settings.occupancy and cfg.app in ("nerf", "nvr")
                 and "occupancy" not in params):
             raise ValueError(
@@ -419,6 +435,7 @@ class RenderEngine:
                 f"/{k.dtype}/T{k.cfg.grid.log2_table_size}"
                 f"L{k.cfg.grid.n_levels}"
                 + (f"/occ-bgt{k.sample_budget}" if k.occupancy else "")
+                + (f"/q-{k.cfg.quant.tag}" if k.cfg.quant else "")
                 + f"#{b.idx}": {
                     "n_traces": b.n_traces, "n_scenes": len(b.order)}
                 for k, b in self._buckets.items()},

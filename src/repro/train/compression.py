@@ -9,7 +9,10 @@ locally instead of being lost (the standard convergence-preserving trick):
     which still proves the numerics and lets tests assert the
     error-feedback invariant: efb_new + kept == g + efb_old.
   * 'int8' — per-leaf symmetric int8 quantization (scale = max|g|/127),
-    4x wire compression for fp32 grads.
+    4x wire compression for fp32 grads. The scale/round/clip math is the
+    SHARED ``repro.quant.qtypes`` codec — the same one that quantizes
+    field tables for serving — so grad compression and field
+    quantization cannot drift (parity-tested in tests/test_compression).
 
 For the paper's own models the hashgrid-table gradient is *naturally
 sparse* (only rows touched by the batch are nonzero — measured by
@@ -28,6 +31,8 @@ from typing import Any, Dict, Tuple
 import jax
 import jax.numpy as jnp
 
+from repro.quant import qtypes
+
 
 def topk_mask(g: jnp.ndarray, frac: float) -> jnp.ndarray:
     """Boolean mask of the top-``frac`` fraction of |g| entries."""
@@ -45,10 +50,13 @@ def compress_topk(g, efb, frac: float):
 
 
 def compress_int8(g, efb):
+    """Per-tensor symmetric int8 wire codec via the shared repro.quant
+    codec (scale = max(max|acc|, eps)/127, round-to-nearest, clip ±127 —
+    numerically identical to the historical inline implementation)."""
     acc = g + efb
-    scale = jnp.maximum(jnp.max(jnp.abs(acc)), 1e-12) / 127.0
-    q = jnp.clip(jnp.round(acc / scale), -127, 127).astype(jnp.int8)
-    deq = q.astype(acc.dtype) * scale
+    scale = qtypes.absmax_scale(acc, "int8")        # per-tensor symmetric
+    q = qtypes.quantize(acc, scale, "int8")         # the wire tensor
+    deq = qtypes.dequantize(q, scale).astype(acc.dtype)
     return deq, acc - deq
 
 

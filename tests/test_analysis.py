@@ -115,7 +115,7 @@ def test_cli_exits_nonzero_on_fixture_and_writes_report(tmp_path):
 # ------------------------------------------------- VMEM estimator (RJ201)
 @pytest.mark.parametrize("app", FIELD_APPS)
 @pytest.mark.parametrize("encoding", FIELD_ENCODINGS)
-@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16, jnp.int8])
 def test_vmem_estimator_agrees_with_runtime_accounting(app, encoding,
                                                        dtype):
     """Acceptance criterion: the static estimator's bytes equal

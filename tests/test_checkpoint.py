@@ -84,3 +84,46 @@ def test_restore_dtype_cast(tmp_path):
     target = {"w": jax.ShapeDtypeStruct((4, 4), jnp.bfloat16)}
     got = store.restore(tmp_path, target)
     assert got["w"].dtype == jnp.bfloat16
+
+
+def _quantized_tree():
+    """A repro.quant-shaped tree: int8 tables + f32 scale siblings +
+    extension dtypes (bf16, fp8 — np.save degrades both to void)."""
+    k = jax.random.PRNGKey(3)
+    return {
+        "grid": jax.random.randint(k, (4, 16, 2), -127, 128, jnp.int8),
+        "grid_scale": jax.random.uniform(k, (4, 1, 1), jnp.float32),
+        "mlp": {"w_in": jax.random.normal(k, (8, 16), jnp.bfloat16),
+                "w8": (jax.random.normal(k, (4, 4)) * 0.1
+                       ).astype(jnp.float8_e4m3fn)},
+    }
+
+
+def test_mixed_dtype_roundtrip(tmp_path):
+    """Integer + extension-dtype leaves round-trip bitwise next to float
+    scales (the quantized-field checkpoint shape, DESIGN.md §10)."""
+    t = _quantized_tree()
+    store.save(t, 1, tmp_path)
+    man = json.loads(
+        (Path(tmp_path) / "step_00000001" / store.MANIFEST).read_text())
+    dts = {l["path"]: l["dtype"] for l in man["leaves"]}
+    assert dts["['grid']"] == "int8"
+    assert dts["['mlp']['w_in']"] == "bfloat16"
+    assert dts["['mlp']['w8']"] == "float8_e4m3fn"
+    got = store.restore(tmp_path, jax.eval_shape(lambda x: x, t))
+    for a, b in zip(jax.tree.leaves(t), jax.tree.leaves(got)):
+        assert a.dtype == b.dtype
+        np.testing.assert_array_equal(
+            np.asarray(a).view(np.uint8), np.asarray(b).view(np.uint8))
+
+
+def test_mixed_dtype_roundtrip_async(tmp_path):
+    ck = store.AsyncCheckpointer(tmp_path)
+    t = _quantized_tree()
+    ck.save(t, 5)
+    ck.wait()
+    got = store.restore(tmp_path, jax.eval_shape(lambda x: x, t))
+    assert got["grid"].dtype == jnp.int8
+    assert got["mlp"]["w8"].dtype == jnp.float8_e4m3fn
+    np.testing.assert_array_equal(np.asarray(t["grid"]),
+                                  np.asarray(got["grid"]))

@@ -36,6 +36,24 @@ def test_int8_quantization_bounded_error(seed):
                                atol=1e-6)
 
 
+@settings(max_examples=10, deadline=None)
+@given(st.integers(0, 10_000))
+def test_int8_wire_codec_matches_field_codec(seed):
+    """compress_int8 IS the repro.quant codec (satellite parity contract):
+    the wire tensor equals qtypes.quantize at the per-tensor absmax
+    scale, and the dequant formula is shared verbatim — grad compression
+    and field quantization cannot drift."""
+    from repro.quant import qtypes
+    g = jax.random.normal(jax.random.PRNGKey(seed), (64, 3)) * 2.0
+    deq, err = compression.compress_int8(g, jnp.zeros_like(g))
+    scale = qtypes.absmax_scale(g, "int8")
+    q = qtypes.quantize(g, scale, "int8")
+    np.testing.assert_array_equal(
+        np.asarray(deq), np.asarray(qtypes.dequantize(q, scale)))
+    assert float(jnp.max(jnp.abs(err))) <= \
+        float(jnp.squeeze(scale)) * 0.5 + 1e-7
+
+
 def test_error_feedback_conserves_total_mass():
     """Over any horizon: sum(sent) + residual efb == n_steps * g exactly
     (error feedback loses nothing, only delays)."""
